@@ -1,0 +1,64 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Every ``figN_*`` module exposes ``run(quick: bool) -> dict`` returning a JSON-
+serializable result payload including a ``claims`` list of
+``(name, ok, detail)`` tuples validating that figure's paper claims.
+``benchmarks.run`` executes all of them and writes ``bench_output.txt`` +
+``benchmarks/results/*.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+#: the paper's benchmark suite with default inputs (Table 4)
+SUITE = [
+    ("gapbs-bc", "kron"), ("gapbs-pr", "kron"), ("gapbs-cc", "kron"),
+    ("silo", "ycsb-c"), ("btree", ""), ("xsbench", ""),
+    ("gups", "8GiB-hot"), ("graph500", "kron"),
+]
+
+
+def budget(quick: bool) -> int:
+    """Optimizer budget: the paper uses 100; quick mode trims to 40."""
+    return 40 if quick else 100
+
+
+def save(name: str, payload: Dict[str, Any]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=_coerce)
+
+
+def _coerce(o):
+    import numpy as np
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def claim(name: str, ok: bool, detail: str) -> Tuple[str, bool, str]:
+    return (name, bool(ok), detail)
+
+
+def print_claims(claims: List[Tuple[str, bool, str]]) -> None:
+    for name, ok, detail in claims:
+        print(f"  [{'PASS' if ok else 'FAIL'}] {name}: {detail}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,58 @@
+"""Fig. 10 — tuning on the NUMA (CXL-emulation) machine + cross-machine
+config transfer.
+
+Paper claims: gains are mostly modest on NUMA (tiers are close in
+latency/bandwidth, migrations nearly free) and pmem-large best configs
+mostly perform well when transferred to NUMA.
+"""
+
+from __future__ import annotations
+
+from repro.core.simulator import Scenario
+from repro.core.bo.tuner import tune_scenario
+
+from .common import SUITE, budget, claim, print_claims, save
+
+
+def run(quick: bool = False) -> dict:
+    b = budget(quick)
+    out = {"workloads": {}}
+    claims = []
+    numa_imps, transfer_ok = {}, []
+    suite = SUITE if not quick else [("silo", "ycsb-c"), ("xsbench", ""),
+                                     ("gups", "8GiB-hot")]
+    for wname, inp in suite:
+        sc_numa = Scenario(wname, inp, machine="numa")
+        res_numa = tune_scenario("hemem", sc_numa, budget=b, seed=19)
+        numa_imps[sc_numa.key] = res_numa.improvement
+
+        # transfer the pmem-large best config onto the NUMA machine
+        sc_pmem = Scenario(wname, inp, machine="pmem-large")
+        res_pmem = tune_scenario("hemem", sc_pmem, budget=b, seed=19)
+        f_numa = sc_numa.objective("hemem")
+        transfer_s = f_numa(res_pmem.best.config)
+        rel = transfer_s / res_numa.best_value
+        transfer_ok.append(rel <= 1.15)
+        out["workloads"][sc_numa.key] = {
+            "numa_improvement": res_numa.improvement,
+            "pmem_config_on_numa_vs_numa_best": rel,
+        }
+        print(f"  {wname:12s} numa-gain={res_numa.improvement:.2f}x "
+              f"pmem-cfg-transfer={rel:.2f}x of numa best", flush=True)
+
+    claims.append(claim(
+        "fig10: NUMA gains are mostly modest (smaller than pmem)",
+        sorted(numa_imps.values())[len(numa_imps) // 2] <= 1.35,
+        ", ".join(f"{k.split(':')[0]}={v:.2f}x" for k, v in numa_imps.items())))
+    claims.append(claim(
+        "fig10: pmem-large best configs mostly transfer to NUMA",
+        sum(transfer_ok) >= max(1, int(0.6 * len(transfer_ok))),
+        f"{sum(transfer_ok)}/{len(transfer_ok)} within 15% of NUMA-native best"))
+    out["claims"] = claims
+    print_claims(claims)
+    save("fig10_numa", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

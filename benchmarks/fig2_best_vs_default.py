@@ -1,0 +1,55 @@
+"""Fig. 2 — BO-tuned best HeMem configuration vs default, all 8 workloads
+on pmem-large.
+
+Paper claims: improvements of 1.07-2.09x for all workloads barring Graph500
+(which shows ~no gain).
+"""
+
+from __future__ import annotations
+
+from repro.core.simulator import Scenario
+from repro.core.bo.tuner import tune_scenario
+
+from .common import SUITE, budget, claim, print_claims, save
+
+
+def run(quick: bool = False) -> dict:
+    out = {"workloads": {}}
+    claims = []
+    imps = {}
+    for wname, inp in SUITE:
+        sc = Scenario(wname, inp)
+        res = tune_scenario("hemem", sc, budget=budget(quick), seed=3)
+        imps[sc.key] = res.improvement
+        out["workloads"][sc.key] = {
+            "default_s": res.default_value,
+            "best_s": res.best_value,
+            "improvement": res.improvement,
+            "best_config": res.best.config,
+            "incumbent": res.incumbent_trajectory(),
+        }
+        print(f"  {sc.key:22s} default={res.default_value:8.1f}s "
+              f"best={res.best_value:8.1f}s  {res.improvement:.2f}x", flush=True)
+
+    non_g500 = {k: v for k, v in imps.items() if not k.startswith("graph500")}
+    claims.append(claim(
+        "fig2: non-graph500 improvements within ~[1.07, 2.09]x band",
+        all(1.02 <= v <= 2.30 for v in non_g500.values()),
+        ", ".join(f"{k}={v:.2f}x" for k, v in non_g500.items())))
+    claims.append(claim(
+        "fig2: most workloads show >= 1.07x gains",
+        sum(v >= 1.07 for v in non_g500.values()) >= len(non_g500) - 1,
+        f"{sum(v >= 1.07 for v in non_g500.values())}/{len(non_g500)}"))
+    g500 = [v for k, v in imps.items() if k.startswith("graph500")][0]
+    claims.append(claim(
+        "fig2: graph500 shows the least gain (~none)",
+        g500 <= 1.10 and g500 <= min(non_g500.values()) + 0.05,
+        f"graph500={g500:.2f}x vs min(others)={min(non_g500.values()):.2f}x"))
+    out["claims"] = claims
+    print_claims(claims)
+    save("fig2_best_vs_default", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

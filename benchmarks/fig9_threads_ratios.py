@@ -1,0 +1,78 @@
+"""Fig. 9 — tuning for different system configurations:
+(a) thread counts, (b) fast:slow memory size ratios (on pmem-small).
+
+Paper claims: (a) consistent gains across thread counts, best knob values
+differ per thread count; (b) tuning matters most for small fast tiers
+(1:16, 1:8) and the optimizer adapts thresholds to the ratio.
+"""
+
+from __future__ import annotations
+
+from repro.core.simulator import Scenario
+from repro.core.bo.tuner import tune_scenario
+
+from .common import budget, claim, print_claims, save
+
+THREADS = [2, 4, 8]
+RATIOS = [16.0, 8.0, 2.0, 1.0, 0.5]   # fast:slow = 1:r (r=0.5 -> 2:1)
+
+
+def run(quick: bool = False) -> dict:
+    b = budget(quick)
+    out = {"threads": {}, "ratios": {}}
+    claims = []
+
+    # (a) thread counts, GUPS + BC-twitter on pmem-small
+    per_thread_cfgs = {}
+    for wname, inp in [("gups", "8GiB-hot"), ("gapbs-bc", "twitter")]:
+        for t in (THREADS[:2] if quick else THREADS):
+            sc = Scenario(wname, inp, machine="pmem-small", threads=t)
+            res = tune_scenario("hemem", sc, budget=b, seed=13 + t)
+            key = f"{wname}:{inp}@t{t}"
+            out["threads"][key] = {"improvement": res.improvement,
+                                   "best_config": res.best.config}
+            per_thread_cfgs.setdefault(wname, {})[t] = res
+            print(f"  threads={t:2d} {wname:12s} {res.improvement:.2f}x", flush=True)
+    # "consistent performance improvement for all thread counts" — gains at
+    # every point; BC-twitter magnitudes are small in our model (small-RSS
+    # fast-cooling, see EXPERIMENTS.md deviations)
+    ok_threads = all(r.improvement >= 1.02
+                     for d in per_thread_cfgs.values() for r in d.values())
+    claims.append(claim(
+        "fig9a: consistent improvement across thread counts",
+        ok_threads,
+        ", ".join(f"{w}@t{t}={r.improvement:.2f}x"
+                  for w, d in per_thread_cfgs.items() for t, r in d.items())))
+    diff_cfgs = []
+    for w, d in per_thread_cfgs.items():
+        cfgs = [tuple(sorted(r.best.config.items())) for r in d.values()]
+        diff_cfgs.append(len(set(cfgs)) > 1)
+    claims.append(claim(
+        "fig9a: best knob values differ across thread counts",
+        all(diff_cfgs), f"distinct-per-thread: {diff_cfgs}"))
+
+    # (b) memory ratios, GUPS on pmem-small
+    ratio_imps = {}
+    for r_ in (RATIOS[:3] if quick else RATIOS):
+        sc = Scenario("gups", "8GiB-hot", machine="pmem-small", threads=4,
+                      fast_slow_ratio=r_)
+        res = tune_scenario("hemem", sc, budget=b, seed=17)
+        label = f"1:{int(r_)}" if r_ >= 1 else f"{int(1 / r_)}:1"
+        ratio_imps[label] = res.improvement
+        out["ratios"][label] = {"improvement": res.improvement,
+                                "best_config": res.best.config}
+        print(f"  ratio={label:5s} {res.improvement:.2f}x", flush=True)
+    small = [v for k, v in ratio_imps.items() if k in ("1:16", "1:8")]
+    large = [v for k, v in ratio_imps.items() if k in ("1:1", "2:1")]
+    claims.append(claim(
+        "fig9b: tuning matters most for small fast tiers",
+        (min(small) >= 1.03) and (not large or max(small) >= max(large) - 0.05),
+        f"{ratio_imps}"))
+    out["claims"] = claims
+    print_claims(claims)
+    save("fig9_threads_ratios", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

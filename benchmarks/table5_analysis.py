@@ -1,0 +1,91 @@
+"""Table 5 — why the best configurations win: knob diffs, importance scores,
+and the per-workload mechanism evidence (migration counts, hit rates).
+
+Paper claims validated here:
+  * PR/CC best configs eliminate (nearly all) migrations vs default.
+  * XSBench best config eliminates warm/bulk-page migrations.
+  * Btree best config reduces write-driven init-phase migrations.
+  * Silo's important knobs include the *hidden* cooling_pages.
+  * GUPS best config increases sampling accuracy (lower sampling_period)
+    or otherwise stabilizes hot classification, reducing shuffling.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import Scenario, run_simulation, PMEM_LARGE
+from repro.core.workloads import make_workload
+from repro.core.knobs import HEMEM_SPACE
+from repro.core.bo.tuner import tune_scenario
+from repro.core.bo.importance import knob_importance
+
+from .common import budget, claim, print_claims, save
+
+
+def _sim(wname, inp, cfg):
+    wl = make_workload(wname, inp, threads=12, scale=0.25, seed=0)
+    return run_simulation(wl, "hemem", cfg, PMEM_LARGE, seed=0)
+
+
+def run(quick: bool = False) -> dict:
+    out = {"workloads": {}}
+    claims = []
+    b = budget(quick)
+    default_cfg = HEMEM_SPACE.default_config()
+
+    for wname, inp in [("gapbs-pr", "kron"), ("xsbench", ""), ("btree", ""),
+                       ("silo", "ycsb-c"), ("gups", "8GiB-hot")]:
+        sc = Scenario(wname, inp)
+        res = tune_scenario("hemem", sc, budget=b, seed=5)
+        best_cfg = res.best.config
+        r_def = _sim(wname, inp, default_cfg)
+        r_best = _sim(wname, inp, best_cfg)
+        imp = knob_importance(HEMEM_SPACE, res.history)
+        diff = {k: (default_cfg[k], best_cfg[k]) for k in best_cfg
+                if best_cfg[k] != default_cfg[k]}
+        out["workloads"][sc.key] = {
+            "improvement": res.improvement,
+            "migrations_default": r_def.total_migrations,
+            "migrations_best": r_best.total_migrations,
+            "hit_default": float(r_def.fast_hit_rate.mean()),
+            "hit_best": float(r_best.fast_hit_rate.mean()),
+            "knob_diff": diff,
+            "importance": imp,
+        }
+        print(f"  {sc.key:22s} {res.improvement:.2f}x  migs {r_def.total_migrations}"
+              f" -> {r_best.total_migrations}  top-knobs: "
+              f"{list(imp)[:3]}", flush=True)
+
+        if wname in ("gapbs-pr", "xsbench"):
+            claims.append(claim(
+                f"table5/{wname}: best config eliminates unnecessary migrations",
+                r_best.total_migrations <= max(0.25 * r_def.total_migrations, 50),
+                f"{r_def.total_migrations} -> {r_best.total_migrations}"))
+        if wname == "btree":
+            claims.append(claim(
+                "table5/btree: best config reduces init write migrations",
+                r_best.total_migrations <= 0.7 * r_def.total_migrations,
+                f"{r_def.total_migrations} -> {r_best.total_migrations}"))
+        if wname == "silo":
+            claims.append(claim(
+                "table5/silo: hidden knob cooling_pages among important knobs",
+                list(imp).index("cooling_pages") < 5
+                if "cooling_pages" in imp else False,
+                f"importance ranking: {list(imp)[:5]}"))
+        if wname == "gups":
+            claims.append(claim(
+                "table5/gups: best config stabilizes hot classification "
+                "(better hit rate, fewer wasteful migrations)",
+                r_best.fast_hit_rate.mean() > r_def.fast_hit_rate.mean(),
+                f"hit {r_def.fast_hit_rate.mean():.3f} -> "
+                f"{r_best.fast_hit_rate.mean():.3f}"))
+
+    out["claims"] = claims
+    print_claims(claims)
+    save("table5_analysis", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

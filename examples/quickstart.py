@@ -1,0 +1,41 @@
+"""Quickstart: tune HeMem's knobs for a workload with SMAC-BO (the paper's
+pipeline, §3.1) and print the before/after table.
+
+    PYTHONPATH=src python examples/quickstart.py [--workload gups] [--budget 40]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.simulator import Scenario
+from repro.core.knobs import HEMEM_SPACE
+from repro.core.bo.tuner import tune_scenario
+from repro.core.bo.importance import knob_importance
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="gups")
+    ap.add_argument("--input", default="")
+    ap.add_argument("--machine", default="pmem-large")
+    ap.add_argument("--budget", type=int, default=40)
+    args = ap.parse_args()
+
+    sc = Scenario(args.workload, args.input, machine=args.machine)
+    print(f"Tuning HeMem for {sc.key} (budget {args.budget})...")
+    res = tune_scenario("hemem", sc, budget=args.budget, seed=0,
+                        verbose=True)
+    print(f"\ndefault: {res.default_value:8.1f}s")
+    print(f"best:    {res.best_value:8.1f}s   ({res.improvement:.2f}x)")
+    print("\nbest config (changes vs default):")
+    dflt = HEMEM_SPACE.default_config()
+    for k, v in res.best.config.items():
+        if v != dflt[k]:
+            print(f"  {k:28s} {dflt[k]:>8} -> {v}")
+    print("\nknob importance (surrogate-based, §3.1):")
+    for k, v in list(knob_importance(HEMEM_SPACE, res.history).items())[:5]:
+        print(f"  {k:28s} {v:.2f}")
+
+
+if __name__ == "__main__":
+    main()

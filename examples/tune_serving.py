@@ -1,0 +1,52 @@
+"""Tune the TieredKVCache knobs with SMAC against the REAL serving path
+(the JaxBackend of DESIGN.md): the objective is attention-mass recall
+shortfall + migration cost on an actual decode loop.
+
+    PYTHONPATH=src python examples/tune_serving.py [--budget 20]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.knobs import HEMEM_SPACE
+from repro.core.bo.tuner import TuningSession
+from repro.core.tiered_kv import KVSpec, TieredKVCache
+
+
+def serving_objective(config) -> float:
+    rng = np.random.default_rng(7)
+    spec = KVSpec(n_layers=2, kv_heads=2, head_dim=16, page_tokens=8)
+    cache = TieredKVCache(spec, batch=2, max_pages_per_seq=48, hbm_pages=12,
+                          config=config)
+    for step in range(96):
+        k = rng.normal(size=(2, spec.n_layers, spec.kv_heads, spec.head_dim))
+        cache.append(k, k)
+        cache._record_reads()
+        if step % 8 == 7:
+            cache.step_engine(50.0)
+    # cost = missed attention mass + migration bandwidth penalty
+    miss = 1.0 - cache.recall()
+    return 100.0 * miss + 0.05 * cache.migrations
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=20)
+    args = ap.parse_args()
+    session = TuningSession("hemem", serving_objective,
+                            scenario_key="tiered-kv-serving",
+                            budget=args.budget, seed=0, n_init=8)
+    res = session.run(verbose=True)
+    print(f"\ndefault objective: {res.default_value:.2f}")
+    print(f"tuned   objective: {res.best_value:.2f} "
+          f"({res.improvement:.2f}x better)")
+    dflt = HEMEM_SPACE.default_config()
+    for k, v in res.best.config.items():
+        if v != dflt[k]:
+            print(f"  {k:28s} {dflt[k]:>8} -> {v}")
+
+
+if __name__ == "__main__":
+    main()

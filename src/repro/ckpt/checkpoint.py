@@ -1,0 +1,154 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout:
+  <dir>/step_000100/
+      manifest.json          — tree structure, dtypes, shapes, data state
+      shard_00000.npz        — flat leaves (this host's slice)
+  <dir>/LATEST               — atomically renamed pointer file
+
+Guarantees:
+  * atomicity: writes go to step_X.tmp-<nonce>/ then os.replace() — a crash
+    mid-save never corrupts the previous checkpoint, and LATEST flips last;
+  * async: save() returns immediately; the writer thread drains on exit or
+    on the next save (back-pressure of 1 in flight);
+  * restore into a DIFFERENT mesh/device-count (elastic restart): leaves are
+    saved as full logical arrays per host shard and re-sharded on load via
+    jax.device_put with the new sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import uuid
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, aux: Optional[dict] = None):
+    """Synchronous sharded save with atomic rename."""
+    leaves, treedef = _flatten(tree)
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {}
+    dtypes = {}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[f"leaf_{i}"] = str(arr.dtype)
+        if arr.dtype.name == "bfloat16":   # npz cannot round-trip bf16
+            arr = arr.astype(np.float32)
+        arrays[f"leaf_{i}"] = arr
+    np.savez(os.path.join(tmp, "shard_00000.npz"), **arrays)
+    manifest = {
+        "step": int(step),
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "aux": aux or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # flip LATEST last
+    latest_tmp = os.path.join(directory, f".LATEST.tmp-{uuid.uuid4().hex[:8]}")
+    with open(latest_tmp, "w") as f:
+        f.write(f"step_{step:08d}")
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def load_checkpoint(directory: str, tree_like, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of ``tree_like``; re-shard with
+    ``shardings`` (pytree of NamedSharding) if given — this is the elastic
+    re-mesh path: the new mesh may have a different device count."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "shard_00000.npz"))
+    leaves, treedef = _flatten(tree_like)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, model {len(leaves)}"
+    new_leaves = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    import jax.numpy as jnp
+    for i, (like, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        if hasattr(like, "dtype") and arr.dtype != like.dtype:
+            arr = jnp.asarray(arr, like.dtype)   # handles bf16 round-trip
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["aux"]
+
+
+class CheckpointManager:
+    """Async save with one in-flight write + retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise e
+
+    def save_async(self, step: int, tree, aux: Optional[dict] = None):
+        self.wait()  # back-pressure: one in flight
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, aux)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and ".tmp" not in n)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

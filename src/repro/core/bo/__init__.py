@@ -1,0 +1,7 @@
+from .rf import RandomForest
+from .smac import SMACOptimizer
+from .tuner import TuningSession, TuningResult
+from .importance import knob_importance
+
+__all__ = ["RandomForest", "SMACOptimizer", "TuningSession", "TuningResult",
+           "knob_importance"]

@@ -1,0 +1,40 @@
+"""Knob-importance scores from the RF surrogate (§3.1, as in [5, 21]).
+
+For each knob k: fix every other knob at its default, sweep k over its range
+(via surrogate predictions), and score k by the spread of predicted execution
+time.  This is the paper's "which tiering system knob(s) are more important"
+analysis used to explain the Table-5 findings (e.g. that the *hidden*
+``cooling_pages`` knob dominates Silo).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
+
+from ..knobs import KnobSpace
+from .rf import RandomForest
+from .smac import Observation
+
+
+def knob_importance(space: KnobSpace, observations: List[Observation],
+                    n_sweep: int = 32, seed: int = 0,
+                    base: Optional[Mapping[str, float]] = None,
+                    ) -> Dict[str, float]:
+    X = np.stack([space.encode(o.config) for o in observations])
+    y = np.array([o.value for o in observations])
+    model = RandomForest(seed=seed).fit(X, y)
+
+    base_cfg = space.validate(dict(base)) if base else space.default_config()
+    x0 = space.encode(base_cfg)
+
+    raw: Dict[str, float] = {}
+    for i, knob in enumerate(space):
+        sweep = np.tile(x0, (n_sweep, 1))
+        sweep[:, i] = np.linspace(0.0, 1.0, n_sweep)
+        mean, _ = model.predict(sweep)
+        raw[knob.name] = float(mean.max() - mean.min())
+    total = sum(raw.values()) or 1.0
+    return {k: v / total for k, v in sorted(raw.items(),
+                                            key=lambda kv: -kv[1])}

@@ -1,0 +1,143 @@
+"""Random-forest regressor from scratch (numpy only).
+
+SMAC's surrogate model [18, 22]: a forest of CART regression trees over the
+unit-encoded knob space.  The across-tree spread provides the predictive
+variance the EI acquisition needs.  No sklearn in this environment, so the
+trees are implemented directly; with tuning-session sizes (≤ a few hundred
+observations, ≤ ~15 features) exact split search is cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Node:
+    # leaf: value set, feature < 0
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class _Tree:
+    """CART regression tree with random feature subsetting at each split."""
+
+    def __init__(self, max_depth: int, min_leaf: int, max_features: int,
+                 rng: np.random.Generator):
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.max_features = max_features
+        self.rng = rng
+        self.nodes: List[_Node] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "_Tree":
+        self.nodes = []
+        self._build(X, y, depth=0)
+        return self
+
+    def _build(self, X: np.ndarray, y: np.ndarray, depth: int) -> int:
+        idx = len(self.nodes)
+        self.nodes.append(_Node(value=float(y.mean())))
+        if depth >= self.max_depth or len(y) < 2 * self.min_leaf \
+                or float(y.std()) < 1e-12:
+            return idx
+        d = X.shape[1]
+        feats = self.rng.choice(d, size=min(self.max_features, d),
+                                replace=False)
+        best = self._best_split(X, y, feats)
+        if best is None:
+            return idx
+        f, thr, mask = best
+        left = self._build(X[mask], y[mask], depth + 1)
+        right = self._build(X[~mask], y[~mask], depth + 1)
+        node = self.nodes[idx]
+        node.feature, node.threshold, node.left, node.right = f, thr, left, right
+        return idx
+
+    def _best_split(self, X, y, feats) -> Optional[Tuple[int, float, np.ndarray]]:
+        n = len(y)
+        best_score, best = np.inf, None
+        for f in feats:
+            xs = X[:, f]
+            order = np.argsort(xs, kind="stable")
+            xs_s, ys_s = xs[order], y[order]
+            # candidate thresholds between distinct consecutive values
+            csum = np.cumsum(ys_s)
+            csum2 = np.cumsum(ys_s ** 2)
+            total, total2 = csum[-1], csum2[-1]
+            ks = np.arange(self.min_leaf, n - self.min_leaf + 1)
+            if len(ks) == 0:
+                continue
+            valid = xs_s[ks - 1] < xs_s[np.minimum(ks, n - 1)]
+            ks = ks[valid]
+            if len(ks) == 0:
+                continue
+            left_sse = csum2[ks - 1] - csum[ks - 1] ** 2 / ks
+            nr = n - ks
+            right_sse = (total2 - csum2[ks - 1]) - (total - csum[ks - 1]) ** 2 / nr
+            scores = left_sse + right_sse
+            j = int(np.argmin(scores))
+            if scores[j] < best_score:
+                k = ks[j]
+                thr = 0.5 * (xs_s[k - 1] + xs_s[k])
+                best_score = scores[j]
+                best = (int(f), float(thr), xs <= thr)
+        return best
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        out = np.empty(len(X))
+        for i, x in enumerate(X):
+            j = 0
+            node = self.nodes[0]
+            while node.feature >= 0:
+                j = node.left if x[node.feature] <= node.threshold else node.right
+                node = self.nodes[j]
+            out[i] = node.value
+        return out
+
+
+class RandomForest:
+    """Bagged regression forest with mean/variance prediction."""
+
+    def __init__(self, n_trees: int = 24, max_depth: int = 12,
+                 min_leaf: int = 2, max_features: Optional[int] = None,
+                 seed: int = 0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.max_features = max_features
+        self.rng = np.random.default_rng(seed)
+        self.trees: List[_Tree] = []
+        self._y_mean = 0.0
+        self._y_std = 1.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForest":
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        self._y_mean = float(y.mean())
+        self._y_std = float(y.std()) or 1.0
+        yn = (y - self._y_mean) / self._y_std
+        d = X.shape[1]
+        mf = self.max_features or max(1, int(np.ceil(d * 5.0 / 6.0)))
+        self.trees = []
+        n = len(X)
+        for _ in range(self.n_trees):
+            boot = self.rng.integers(0, n, size=n)
+            t = _Tree(self.max_depth, self.min_leaf, mf, self.rng)
+            t.fit(X[boot], yn[boot])
+            self.trees.append(t)
+        return self
+
+    def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (mean, std) per row, de-normalized."""
+        X = np.asarray(X, dtype=np.float64)
+        preds = np.stack([t.predict(X) for t in self.trees])  # (T, N)
+        mean = preds.mean(axis=0) * self._y_std + self._y_mean
+        std = preds.std(axis=0) * self._y_std
+        return mean, np.maximum(std, 1e-9 * abs(self._y_std))

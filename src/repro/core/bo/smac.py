@@ -1,0 +1,173 @@
+"""SMAC-style Bayesian optimizer (§3.1).
+
+Sequential Model-based Algorithm Configuration [18]: random-forest surrogate
++ Expected-Improvement acquisition, with (1) an initial random design and
+(2) periodic random interleaving, exactly as the paper configures it
+(budget 100, 20 initial random, 20 % random-config probability, §4.1).
+
+Candidate generation follows SMAC's local-search-plus-random scheme: EI is
+maximized over Gaussian neighbours of the best-seen configurations plus a
+pool of fresh uniform samples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..knobs import Config, KnobSpace
+from .rf import RandomForest
+
+
+def _norm_pdf(z: np.ndarray) -> np.ndarray:
+    return np.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+
+
+def _norm_cdf(z: np.ndarray) -> np.ndarray:
+    # erf-based CDF (no scipy in this environment)
+    return 0.5 * (1.0 + np.vectorize(math.erf)(z / math.sqrt(2.0)))
+
+
+def expected_improvement(mean: np.ndarray, std: np.ndarray,
+                         best: float) -> np.ndarray:
+    """EI for *minimization*."""
+    std = np.maximum(std, 1e-12)
+    z = (best - mean) / std
+    return (best - mean) * _norm_cdf(z) + std * _norm_pdf(z)
+
+
+@dataclasses.dataclass
+class Observation:
+    config: Config
+    value: float
+
+
+class SMACOptimizer:
+    def __init__(self, space: KnobSpace, seed: int = 0,
+                 n_init: int = 20, random_prob: float = 0.20,
+                 n_candidates: int = 512, n_local_parents: int = 4,
+                 n_trees: int = 24, start_with_default: bool = True):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.n_init = n_init
+        self.random_prob = random_prob
+        self.n_candidates = n_candidates
+        self.n_local_parents = n_local_parents
+        self.n_trees = n_trees
+        self.start_with_default = start_with_default
+        self.observations: List[Observation] = []
+        self._surrogate: Optional[RandomForest] = None
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def best(self) -> Observation:
+        return min(self.observations, key=lambda o: o.value)
+
+    def tell(self, config: Mapping[str, Any], value: float) -> None:
+        self.observations.append(
+            Observation(self.space.validate(config), float(value)))
+        self._surrogate = None  # invalidate
+
+    # -- surrogate ------------------------------------------------------------
+    def surrogate(self) -> RandomForest:
+        if self._surrogate is None:
+            X = np.stack([self.space.encode(o.config)
+                          for o in self.observations])
+            y = np.array([o.value for o in self.observations])
+            self._surrogate = RandomForest(
+                n_trees=self.n_trees,
+                seed=int(self.rng.integers(2 ** 31))).fit(X, y)
+        return self._surrogate
+
+    # -- suggestion -----------------------------------------------------------
+    def ask(self) -> Config:
+        n_seen = len(self.observations)
+        if n_seen == 0 and self.start_with_default:
+            return self.space.default_config()  # paper: start from default
+        if n_seen < self.n_init:
+            return self.space.sample(self.rng)
+        if self.rng.uniform() < self.random_prob:
+            return self.space.sample(self.rng)  # forced random interleave
+
+        model = self.surrogate()
+        best_val = self.best.value
+
+        # candidate pool: local neighbours of the best parents + random
+        parents = sorted(self.observations, key=lambda o: o.value)
+        parents = parents[:self.n_local_parents]
+        cands: List[Config] = []
+        per_parent = max(4, self.n_candidates // (2 * len(parents)))
+        for p in parents:
+            cands.extend(self.space.neighbors(p.config, self.rng,
+                                              n=per_parent, scale=0.12))
+            cands.extend(self.space.neighbors(p.config, self.rng,
+                                              n=per_parent // 2, scale=0.35))
+        cands.extend(self.space.sample_batch(
+            self.rng, max(8, self.n_candidates - len(cands))))
+
+        X = np.stack([self.space.encode(c) for c in cands])
+        mean, std = model.predict(X)
+        ei = expected_improvement(mean, std, best_val)
+        return cands[int(np.argmax(ei))]
+
+    # -- full loop -------------------------------------------------------------
+    def minimize(self, objective: Callable[[Config], float],
+                 budget: int = 100,
+                 callback: Optional[Callable[[int, Config, float], None]] = None,
+                 ) -> Observation:
+        for i in range(budget):
+            cfg = self.ask()
+            val = float(objective(cfg))
+            self.tell(cfg, val)
+            if callback is not None:
+                callback(i, cfg, val)
+        return self.best
+
+
+class RandomSearch:
+    """Unguided baseline the paper contrasts BO against (§3)."""
+
+    def __init__(self, space: KnobSpace, seed: int = 0,
+                 start_with_default: bool = True):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.start_with_default = start_with_default
+        self.observations: List[Observation] = []
+
+    @property
+    def best(self) -> Observation:
+        return min(self.observations, key=lambda o: o.value)
+
+    def minimize(self, objective, budget: int = 100, callback=None):
+        for i in range(budget):
+            cfg = (self.space.default_config()
+                   if i == 0 and self.start_with_default
+                   else self.space.sample(self.rng))
+            val = float(objective(cfg))
+            self.observations.append(Observation(cfg, val))
+            if callback is not None:
+                callback(i, cfg, val)
+        return self.best
+
+
+def grid_search(space: KnobSpace, objective, knob_values: Dict[str, List[Any]],
+                base: Optional[Config] = None
+                ) -> Tuple[Config, float, Dict[Tuple, float]]:
+    """Exhaustive grid over a subset of knobs (the paper's Fig-1 case study)."""
+    import itertools
+    base = dict(base or space.default_config())
+    names = list(knob_values)
+    results: Dict[Tuple, float] = {}
+    best_cfg, best_val = None, np.inf
+    for combo in itertools.product(*(knob_values[n] for n in names)):
+        cfg = dict(base)
+        cfg.update(dict(zip(names, combo)))
+        cfg = space.validate(cfg)
+        val = float(objective(cfg))
+        results[combo] = val
+        if val < best_val:
+            best_cfg, best_val = cfg, val
+    return best_cfg, best_val, results

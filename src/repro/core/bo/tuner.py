@@ -1,0 +1,100 @@
+"""Tuning pipeline (§3.1): launch session -> evaluate -> update -> repeat.
+
+:class:`TuningSession` wires a :class:`~repro.core.simulator.Scenario` (or any
+objective) to an optimizer and records the full history, the incumbent
+trajectory and the iterations-to-optimum statistics the paper reports
+("SMAC finds the best-performing configuration for GUPS within 10-16
+iterations").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+import numpy as np
+
+from ..knobs import Config, KnobSpace, get_space
+from .smac import Observation, RandomSearch, SMACOptimizer
+
+
+@dataclasses.dataclass
+class TuningResult:
+    engine: str
+    scenario: str
+    budget: int
+    history: List[Observation]
+    default_value: float
+    wall_s: float
+
+    @property
+    def best(self) -> Observation:
+        return min(self.history, key=lambda o: o.value)
+
+    @property
+    def best_value(self) -> float:
+        return self.best.value
+
+    @property
+    def improvement(self) -> float:
+        """default/best execution-time ratio (the paper's headline metric)."""
+        return self.default_value / self.best_value
+
+    def incumbent_trajectory(self) -> np.ndarray:
+        vals = np.array([o.value for o in self.history])
+        return np.minimum.accumulate(vals)
+
+    def iterations_to(self, target: float, rtol: float = 0.01) -> Optional[int]:
+        """First iteration whose incumbent is within rtol of ``target``."""
+        traj = self.incumbent_trajectory()
+        hit = np.flatnonzero(traj <= target * (1.0 + rtol))
+        return int(hit[0]) + 1 if len(hit) else None
+
+
+class TuningSession:
+    def __init__(self, engine: str, objective: Callable[[Config], float],
+                 scenario_key: str = "", space: Optional[KnobSpace] = None,
+                 optimizer: str = "smac", budget: int = 100, seed: int = 0,
+                 n_init: int = 20, random_prob: float = 0.20):
+        self.engine = engine
+        self.space = space if space is not None else get_space(engine)
+        self.objective = objective
+        self.scenario_key = scenario_key
+        self.budget = budget
+        if optimizer == "smac":
+            self.optimizer = SMACOptimizer(self.space, seed=seed,
+                                           n_init=n_init,
+                                           random_prob=random_prob)
+        elif optimizer == "random":
+            self.optimizer = RandomSearch(self.space, seed=seed)
+        else:
+            raise ValueError(f"unknown optimizer {optimizer!r}")
+
+    def run(self, verbose: bool = False) -> TuningResult:
+        t0 = time.time()
+        default_value = float(self.objective(self.space.default_config()))
+
+        def cb(i, cfg, val):
+            if verbose:
+                best = min(o.value for o in self.optimizer.observations)
+                print(f"  iter {i + 1:3d}/{self.budget}: f={val:9.2f}s "
+                      f"best={best:9.2f}s", flush=True)
+
+        self.optimizer.minimize(self.objective, budget=self.budget,
+                                callback=cb)
+        return TuningResult(
+            engine=self.engine, scenario=self.scenario_key,
+            budget=self.budget,
+            history=list(self.optimizer.observations),
+            default_value=default_value, wall_s=time.time() - t0)
+
+
+def tune_scenario(engine: str, scenario, budget: int = 100, seed: int = 0,
+                  optimizer: str = "smac", verbose: bool = False,
+                  ) -> TuningResult:
+    """Convenience wrapper used by benchmarks and examples."""
+    session = TuningSession(engine, scenario.objective(engine),
+                            scenario_key=scenario.key, budget=budget,
+                            seed=seed, optimizer=optimizer)
+    return session.run(verbose=verbose)

@@ -1,0 +1,454 @@
+"""Tiering engines.
+
+:class:`HeMemEngine` is the faithful reimplementation of the mechanism the
+paper tunes (§3.2): PEBS-subsampled per-page read/write counters, separate
+read/write hotness thresholds, batched count cooling, and a periodic migration
+thread with ring-capacity and migration-rate limits.  Every knob of paper
+Table 2 is honoured.
+
+:class:`HMSDKEngine` models HMSDK's DAMON-based region monitor (§4.5): the
+address space is split into ``nr_regions`` regions, one page per region is
+probed per sampling interval, and whole regions are promoted/demoted.  DAMON's
+core assumption — all pages of a region share an access frequency — is kept,
+which is exactly what makes it fail on GUPS (paper Fig. 12).
+
+:class:`MemtisEngine` models the Memtis baseline (§4.6): the hot threshold is
+*dynamically* adapted so the hot set matches fast-tier capacity, a warm class
+is excluded from migration, but the cooling period, the migration period and
+the (very high, 100k) write sampling period remain static.
+
+:class:`StaticEngine` (first-touch, never migrates) and :class:`OracleEngine`
+(clairvoyant placement, free migrations — a CH_opt-style bound [49]) are the
+reference points.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+import numpy as np
+
+from .pages import MigrationPlan, TierState
+
+
+class TieringEngine:
+    """Protocol: observe true per-page access counts, plan migrations."""
+
+    #: if True, the simulator charges no bandwidth/stall cost for migrations
+    zero_cost_migrations = False
+
+    def __init__(self, config: Mapping[str, Any], tier: TierState,
+                 seed: int = 0):
+        self.config = dict(config)
+        self.tier = tier
+        self.rng = np.random.default_rng(seed)
+        # per-epoch telemetry the simulator reads back
+        self.samples_last_epoch = 0.0     # PEBS-style samples taken (overhead)
+        self.overhead_ms_last_epoch = 0.0  # extra engine CPU time (e.g. Memtis kernel)
+        self.cooling_events = 0
+
+    def observe(self, reads: np.ndarray, writes: np.ndarray,
+                epoch_ms: float) -> None:
+        raise NotImplementedError
+
+    def plan(self, epoch_ms: float, max_pages_this_epoch: int) -> MigrationPlan:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# HeMem — faithful to §3.2 + Table 2.
+# ---------------------------------------------------------------------------
+class HeMemEngine(TieringEngine):
+    def __init__(self, config, tier, seed: int = 0):
+        super().__init__(config, tier, seed)
+        c = self.config
+        n = tier.n_pages
+        self.read_counts = np.zeros(n, dtype=np.float64)
+        self.write_counts = np.zeros(n, dtype=np.float64)
+        self.sampling_period = float(c["sampling_period"])
+        self.write_sampling_period = float(c["write_sampling_period"])
+        self.read_hot = float(c["read_hot_threshold"])
+        self.write_hot = float(c["write_hot_threshold"])
+        self.cooling_threshold = float(c["cooling_threshold"])
+        self.migration_period_ms = float(c["migration_period"])
+        self.max_migration_rate_gibs = float(c["max_migration_rate"])
+        self.cooling_pages = int(c["cooling_pages"])
+        self.hot_ring = int(c["hot_ring_reqs_threshold"])
+        self.cold_ring = int(c["cold_ring_reqs_threshold"])
+        # cooling sweep state: cursor into the page space + samples since the
+        # last cooling trigger
+        self._cool_cursor = 0
+        self._samples_since_cool = 0.0
+        self._mig_credit_ms = 0.0
+
+    #: normalization of the cooling trigger: one trigger fires per
+    #: ``cooling_threshold * n_pages / COOL_UNIT_PAGES`` sampled accesses
+    COOL_UNIT_PAGES = 16.0
+
+    # -- monitoring (PEBS subsampling) -------------------------------------
+    def observe(self, reads, writes, epoch_ms):
+        # One PEBS sample per `sampling_period` load events (expected value,
+        # Poisson-dispersed — the sampling noise is what makes low sampling
+        # frequencies inaccurate for GUPS, §4.2).
+        lam_r = reads / self.sampling_period
+        lam_w = writes / self.write_sampling_period
+        sr = self.rng.poisson(lam_r).astype(np.float64)
+        sw = self.rng.poisson(lam_w).astype(np.float64)
+        self.samples_last_epoch = float(sr.sum() + sw.sum())
+        # cooling is checked while samples are processed (not by the
+        # migration thread): every `cooling_threshold` worth of sampled
+        # accesses (normalized per COOL_UNIT_PAGES pages of the working set)
+        # fires the trigger, and each trigger cools ONE batch of
+        # `cooling_pages` pages, advancing the sweep cursor.  Small
+        # `cooling_pages` therefore stagger the sweep across triggers —
+        # different pages observe the EMA at different phases — while
+        # `cooling_pages >= n` cools everything synchronously ("all pages at
+        # the same time", the Silo fix of §4.2).
+        n = self.tier.n_pages
+        trigger = max(self.cooling_threshold * n / self.COOL_UNIT_PAGES, 1.0)
+        self._samples_since_cool += self.samples_last_epoch
+        k = int(self._samples_since_cool // trigger)
+        # samples and cooling interleave within the epoch: a page that gets
+        # halved k_eff times mid-accumulation retains factor
+        # (2 - 2^-k_eff)/(k_eff + 1) of its newly-added counts
+        k_eff = k * min(self.cooling_pages, n) / n
+        factor = (2.0 - 2.0 ** (-k_eff)) / (k_eff + 1.0) if k_eff > 0 else 1.0
+        # old counts see the k chunked halvings; the new samples arrive
+        # interleaved, so they only retain `factor` of their mass
+        for _ in range(k):
+            self._samples_since_cool -= trigger
+            self._cool_one_batch()
+        self.read_counts += sr * factor
+        self.write_counts += sw * factor
+
+    # -- classification ------------------------------------------------------
+    def hot_mask(self) -> np.ndarray:
+        return (self.read_counts >= self.read_hot) | (
+            self.write_counts >= self.write_hot)
+
+    # -- cooling (batched halving, §3.2) --------------------------------------
+    def _cool_one_batch(self) -> None:
+        n = self.tier.n_pages
+        self.cooling_events += 1
+        start = self._cool_cursor if 0 <= self._cool_cursor < n else 0
+        end = min(start + self.cooling_pages, n)
+        sl = slice(start, end)
+        self.read_counts[sl] *= 0.5
+        self.write_counts[sl] *= 0.5
+        self._cool_cursor = 0 if end >= n else end
+
+    # -- migration thread -------------------------------------------------------
+    def plan(self, epoch_ms, max_pages_this_epoch):
+        self._mig_credit_ms += epoch_ms
+        runs = int(self._mig_credit_ms // self.migration_period_ms)
+        if runs <= 0:
+            return MigrationPlan.empty()
+        self._mig_credit_ms -= runs * self.migration_period_ms
+
+        tier = self.tier
+        hot = self.hot_mask()
+        heat = self.read_counts + self.write_counts
+
+        # ring capacities scale with the number of thread runs this epoch
+        hot_budget = self.hot_ring * runs
+        cold_budget = self.cold_ring * runs
+        # migration-rate limit (GiB/s) over the epoch
+        rate_pages = int(self.max_migration_rate_gibs * (2 ** 30) *
+                         (epoch_ms / 1e3) / tier.page_bytes)
+        rate_pages = min(rate_pages, max_pages_this_epoch)
+
+        cand_p = np.flatnonzero(hot & ~tier.in_fast & tier.allocated)
+        if len(cand_p) > hot_budget:  # ring keeps the hottest requests
+            cand_p = cand_p[np.argsort(-heat[cand_p], kind="stable")[:hot_budget]]
+
+        # demotions: HeMem keeps a free-page watermark in DRAM; cold pages are
+        # demoted (coldest first) both to satisfy pending promotions and to
+        # restore the watermark.  Only *cold* pages are candidates — when the
+        # whole working set is hot (e.g. Graph500 BFS), nothing is demoted and
+        # migration activity quiesces.
+        room = tier.fast_free
+        watermark = max(1, tier.fast_capacity // 50)
+        pressure = max(0, watermark - room)
+        need = max(max(0, len(cand_p) - room), pressure)
+        demote = np.zeros(0, dtype=np.int64)
+        if need > 0:
+            cand_d = np.flatnonzero(~hot & tier.in_fast)
+            if len(cand_d):
+                order = np.argsort(heat[cand_d], kind="stable")  # coldest first
+                demote = cand_d[order[:min(need, cold_budget)]]
+
+        # promotions bounded by (room + demotions) and the rate limit
+        n_promote = min(len(cand_p), room + len(demote))
+        total_allowed = max(0, rate_pages)
+        if n_promote + len(demote) > total_allowed:
+            # migration thread moves what the rate allows; demotions make room
+            # first (HeMem frees before filling)
+            n_demote = min(len(demote), total_allowed)
+            demote = demote[:n_demote]
+            n_promote = min(n_promote, room + n_demote,
+                            total_allowed - n_demote)
+        promote = cand_p[np.argsort(-heat[cand_p], kind="stable")[:n_promote]] \
+            if n_promote > 0 else np.zeros(0, dtype=np.int64)
+        return MigrationPlan(promote=promote, demote=demote)
+
+
+# ---------------------------------------------------------------------------
+# HMSDK / DAMON — region-based monitor (§4.5).
+# ---------------------------------------------------------------------------
+class HMSDKEngine(TieringEngine):
+    def __init__(self, config, tier, seed: int = 0):
+        super().__init__(config, tier, seed)
+        c = self.config
+        self.nr_regions = min(int(c["nr_regions"]), tier.n_pages)
+        self.sample_us = float(c["sample_us"])
+        self.aggr_us = float(c["aggr_us"])
+        self.hot_access_pct = float(c["hot_access_pct"])
+        self.cold_aggr_intervals = int(c["cold_aggr_intervals"])
+        self.migration_period_ms = float(c["migration_period"])
+        self.max_migration_rate_gibs = float(c["max_migration_rate"])
+        # equal-size regions over the page index space
+        bounds = np.linspace(0, tier.n_pages, self.nr_regions + 1).astype(np.int64)
+        self.region_lo = bounds[:-1]
+        self.region_hi = bounds[1:]
+        self.region_of_page = np.searchsorted(bounds[1:], np.arange(tier.n_pages),
+                                              side="right")
+        self.nr_accesses = np.zeros(self.nr_regions, dtype=np.float64)
+        self.idle_intervals = np.zeros(self.nr_regions, dtype=np.float64)
+        self._mig_credit_ms = 0.0
+
+    def observe(self, reads, writes, epoch_ms):
+        # DAMON: every sample interval, probe ONE random page per region and
+        # check its accessed bit.  Estimate: nr_accesses = hits per
+        # aggregation interval.  P(accessed bit set) for a page with rate r
+        # accesses/ms over a sample window of sample_ms: 1 - exp(-r*window).
+        sample_ms = self.sample_us / 1e3
+        nr_samples = max(1, int(round((epoch_ms * 1e3) / self.aggr_us *
+                                      (self.aggr_us / self.sample_us))))
+        # == samples per epoch (epoch_ms / sample_ms), bounded for cost
+        nr_samples = max(1, int(epoch_ms / sample_ms))
+        rate = (reads + writes) / max(epoch_ms, 1e-9)  # accesses per ms
+        p_hit = 1.0 - np.exp(-rate * sample_ms)
+        # Monte-Carlo probe: one random page per region per sample
+        hits = np.zeros(self.nr_regions)
+        # vectorized: sample K pages per region at once
+        K = min(nr_samples, 64)  # cap probes modelled per epoch (DAMON cost cap)
+        for k in range(K):
+            offs = self.rng.integers(0, np.maximum(self.region_hi - self.region_lo, 1))
+            pages = np.minimum(self.region_lo + offs, self.region_hi - 1)
+            hits += self.rng.uniform(size=self.nr_regions) < p_hit[pages]
+        self.nr_accesses = hits / K  # fraction of probes that hit
+        self.idle_intervals = np.where(self.nr_accesses <= 0,
+                                       self.idle_intervals + 1, 0.0)
+        self.samples_last_epoch = float(nr_samples * self.nr_regions) / 50.0
+        # DAMON PT-scanning is cheap vs PEBS interrupts; scale overhead down
+
+    def plan(self, epoch_ms, max_pages_this_epoch):
+        self._mig_credit_ms += epoch_ms
+        runs = int(self._mig_credit_ms // self.migration_period_ms)
+        if runs <= 0:
+            return MigrationPlan.empty()
+        self._mig_credit_ms -= runs * self.migration_period_ms
+        tier = self.tier
+        hot_regions = self.nr_accesses >= (self.hot_access_pct / 100.0)
+        cold_regions = self.idle_intervals >= self.cold_aggr_intervals
+        hot_pages = hot_regions[self.region_of_page]
+        cold_pages = cold_regions[self.region_of_page]
+
+        rate_pages = int(self.max_migration_rate_gibs * (2 ** 30) *
+                         (epoch_ms / 1e3) / tier.page_bytes)
+        rate_pages = min(rate_pages, max_pages_this_epoch)
+
+        cand_p = np.flatnonzero(hot_pages & ~tier.in_fast & tier.allocated)
+        # regions with higher estimated rate first; saturated estimates tie,
+        # so the order among them is effectively arbitrary — which is what
+        # makes the default's migrations "erroneous" (§4.5: ~10M unnecessary
+        # pages for XSBench)
+        jitter = self.rng.uniform(0.0, 1e-6, size=self.nr_regions)
+        est = self.nr_accesses + jitter
+        if len(cand_p):
+            order = np.argsort(-est[self.region_of_page[cand_p]],
+                               kind="stable")
+            cand_p = cand_p[order]
+        room = tier.fast_free
+        need = max(0, min(len(cand_p), rate_pages) - room)
+        demote = np.zeros(0, dtype=np.int64)
+        if need > 0:
+            cand_d = np.flatnonzero(cold_pages & tier.in_fast)
+            if len(cand_d) < need:  # fall back to coldest estimated regions
+                extra = np.flatnonzero(~hot_pages & ~cold_pages & tier.in_fast)
+                order = np.argsort(est[self.region_of_page[extra]],
+                                   kind="stable")
+                cand_d = np.concatenate([cand_d, extra[order]])
+            if len(cand_d) < need:
+                # HMSDK's DAMOS demotion scheme ranks regions by estimated
+                # coldness even when none is idle: under a saturated monitor
+                # the ranking is noise, so pages swap between tiers with no
+                # benefit.  This is the erroneous-migration mode the paper
+                # observes with default knobs.
+                rest = np.flatnonzero(hot_pages & tier.in_fast)
+                order = np.argsort(est[self.region_of_page[rest]],
+                                   kind="stable")
+                cand_d = np.concatenate([cand_d, rest[order]])
+            demote = cand_d[:need]
+        n_promote = min(len(cand_p), room + len(demote))
+        total = n_promote + len(demote)
+        if total > rate_pages:
+            n_demote = min(len(demote), rate_pages)
+            demote = demote[:n_demote]
+            n_promote = max(0, min(n_promote, room + n_demote, rate_pages - n_demote))
+        return MigrationPlan(promote=cand_p[:n_promote], demote=demote)
+
+
+# ---------------------------------------------------------------------------
+# Memtis — dynamic hot threshold, static everything else (§4.6).
+# ---------------------------------------------------------------------------
+class MemtisEngine(TieringEngine):
+    #: extra kernel time charged per migrated page (ms) — the paper observes
+    #: Memtis "spends a significant amount of time in the kernel for page
+    #: allocations, page splitting and migrations".
+    KERNEL_MS_PER_PAGE = 0.02
+
+    def __init__(self, config, tier, seed: int = 0):
+        super().__init__(config, tier, seed)
+        c = self.config
+        n = tier.n_pages
+        self.read_counts = np.zeros(n, dtype=np.float64)
+        self.write_counts = np.zeros(n, dtype=np.float64)
+        self.sampling_period = float(c["sampling_period"])
+        self.write_sampling_period = float(c["write_sampling_period"])
+        self.cooling_period_ms = float(c["cooling_period_ms"])
+        self.adaptation_period_ms = float(c["adaptation_period_ms"])
+        self.migration_period_ms = float(c["migration_period"])
+        self.max_migration_rate_gibs = float(c["max_migration_rate"])
+        self.warm_pct = float(c["warm_pct"]) / 100.0
+        self.hot_threshold = 4.0  # initial; adapted dynamically
+        self._cool_credit = 0.0
+        self._adapt_credit = 0.0
+        self._mig_credit = 0.0
+
+    def observe(self, reads, writes, epoch_ms):
+        sr = self.rng.poisson(reads / self.sampling_period).astype(np.float64)
+        sw = self.rng.poisson(writes / self.write_sampling_period).astype(np.float64)
+        self.read_counts += sr
+        self.write_counts += sw
+        self.samples_last_epoch = float(sr.sum() + sw.sum())
+        self._cool_credit += epoch_ms
+        self._adapt_credit += epoch_ms
+        if self._cool_credit >= self.cooling_period_ms:
+            self._cool_credit = 0.0
+            self.read_counts *= 0.5
+            self.write_counts *= 0.5
+            self.cooling_events += 1
+        if self._adapt_credit >= self.adaptation_period_ms:
+            self._adapt_credit = 0.0
+            self._adapt_threshold()
+
+    def _adapt_threshold(self):
+        """Pick the smallest threshold whose hot set fits the fast tier."""
+        heat = self.read_counts + self.write_counts
+        cap = self.tier.fast_capacity
+        if cap <= 0 or heat.size == 0:
+            return
+        k = min(cap, heat.size - 1)
+        part = np.partition(heat, heat.size - 1 - k)
+        self.hot_threshold = max(part[heat.size - 1 - k], 1.0)
+
+    def plan(self, epoch_ms, max_pages_this_epoch):
+        self._mig_credit += epoch_ms
+        runs = int(self._mig_credit // self.migration_period_ms)
+        self.overhead_ms_last_epoch = 0.0
+        if runs <= 0:
+            return MigrationPlan.empty()
+        self._mig_credit -= runs * self.migration_period_ms
+        tier = self.tier
+        heat = self.read_counts + self.write_counts
+        hot = heat >= self.hot_threshold
+        warm = (~hot) & (heat >= self.hot_threshold * (1.0 - self.warm_pct))
+
+        rate_pages = int(self.max_migration_rate_gibs * (2 ** 30) *
+                         (epoch_ms / 1e3) / tier.page_bytes)
+        rate_pages = min(rate_pages, max_pages_this_epoch)
+
+        cand_p = np.flatnonzero(hot & ~tier.in_fast & tier.allocated)
+        if len(cand_p):
+            cand_p = cand_p[np.argsort(-heat[cand_p], kind="stable")]
+        room = tier.fast_free
+        need = max(0, min(len(cand_p), rate_pages) - room)
+        demote = np.zeros(0, dtype=np.int64)
+        if need > 0:
+            # never demote hot or warm pages (warm class, Memtis improvement #2)
+            cand_d = np.flatnonzero(tier.in_fast & ~hot & ~warm)
+            if len(cand_d):
+                order = np.argsort(heat[cand_d], kind="stable")
+                demote = cand_d[order[:need]]
+        n_promote = min(len(cand_p), room + len(demote))
+        total = n_promote + len(demote)
+        if total > rate_pages:
+            n_demote = min(len(demote), rate_pages)
+            demote = demote[:n_demote]
+            n_promote = max(0, min(n_promote, room + n_demote, rate_pages - n_demote))
+        plan = MigrationPlan(promote=cand_p[:n_promote], demote=demote)
+        self.overhead_ms_last_epoch = plan.n_pages * self.KERNEL_MS_PER_PAGE
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Reference points.
+# ---------------------------------------------------------------------------
+class StaticEngine(TieringEngine):
+    """First-touch placement, never migrates."""
+
+    def observe(self, reads, writes, epoch_ms):
+        self.samples_last_epoch = 0.0
+
+    def plan(self, epoch_ms, max_pages_this_epoch):
+        return MigrationPlan.empty()
+
+
+class OracleEngine(TieringEngine):
+    """Clairvoyant top-capacity placement with free migrations (CH_opt bound)."""
+
+    zero_cost_migrations = True
+
+    def __init__(self, config, tier, seed: int = 0):
+        super().__init__(config, tier, seed)
+        self._heat = np.zeros(tier.n_pages, dtype=np.float64)
+
+    def observe(self, reads, writes, epoch_ms):
+        self._heat = reads + writes  # perfect, instantaneous knowledge
+        self.samples_last_epoch = 0.0
+
+    def plan(self, epoch_ms, max_pages_this_epoch):
+        tier = self.tier
+        alloc = np.flatnonzero(tier.allocated)
+        if len(alloc) == 0:
+            return MigrationPlan.empty()
+        cap = min(tier.fast_capacity, len(alloc))
+        heat_alloc = self._heat[alloc]
+        top = alloc[np.argsort(-heat_alloc, kind="stable")[:cap]]
+        want = np.zeros(tier.n_pages, dtype=bool)
+        want[top] = True
+        promote = np.flatnonzero(want & ~tier.in_fast)
+        demote = np.flatnonzero(~want & tier.in_fast)
+        # keep capacity exact: demote enough to fit the promotions
+        need = max(0, len(promote) - (tier.fast_capacity - tier.fast_used) )
+        demote = demote[:max(need, 0)] if need > 0 else np.zeros(0, dtype=np.int64)
+        return MigrationPlan(promote=promote, demote=demote)
+
+
+ENGINES = {
+    "hemem": HeMemEngine,
+    "hmsdk": HMSDKEngine,
+    "memtis": MemtisEngine,
+    "static": StaticEngine,
+    "oracle": OracleEngine,
+}
+
+
+def make_engine(name: str, config: Mapping[str, Any], tier: TierState,
+                seed: int = 0) -> TieringEngine:
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; have {sorted(ENGINES)}")
+    return cls(config, tier, seed=seed)

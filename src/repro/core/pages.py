@@ -1,0 +1,98 @@
+"""Page and tier-placement state shared by tiering engines and the simulator.
+
+A *page* is the migration granule (2 MiB huge page, as in HeMem).  Placement is
+a single boolean vector ``in_fast``: every allocated page is owned by exactly
+one tier at any instant.  Migration is copy-then-flip, which by construction
+avoids the migrate-vs-free race the paper had to patch in HeMem (§3.2,
+deployment issue #2) — there is no intermediate state in which a page is owned
+by zero or two tiers.  Property tests assert this invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+PAGE_BYTES = 2 * 1024 * 1024  # 2 MiB huge pages, HeMem's migration granule
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    """Result of one simulator epoch of migration-thread activity."""
+
+    promote: np.ndarray  # page indices slow -> fast
+    demote: np.ndarray   # page indices fast -> slow
+
+    @staticmethod
+    def empty() -> "MigrationPlan":
+        z = np.zeros(0, dtype=np.int64)
+        return MigrationPlan(promote=z, demote=z)
+
+    @property
+    def n_pages(self) -> int:
+        return int(len(self.promote) + len(self.demote))
+
+
+class TierState:
+    """Two-tier placement of ``n_pages`` pages with a fixed fast-tier capacity.
+
+    First-touch allocation mirrors HeMem: allocations land in the fast tier
+    (DRAM) while it has free space, then overflow to the slow tier (NVM/CXL).
+    """
+
+    def __init__(self, n_pages: int, fast_capacity_pages: int,
+                 page_bytes: int = PAGE_BYTES):
+        if fast_capacity_pages < 0:
+            raise ValueError("fast_capacity_pages must be >= 0")
+        self.n_pages = int(n_pages)
+        self.page_bytes = int(page_bytes)
+        self.fast_capacity = int(fast_capacity_pages)
+        self.in_fast = np.zeros(self.n_pages, dtype=bool)
+        self.allocated = np.zeros(self.n_pages, dtype=bool)
+        # lifetime counters (used by benchmarks / figures)
+        self.total_promoted = 0
+        self.total_demoted = 0
+
+    # -- invariant helpers ---------------------------------------------------
+    @property
+    def fast_used(self) -> int:
+        return int(self.in_fast.sum())
+
+    @property
+    def fast_free(self) -> int:
+        return self.fast_capacity - self.fast_used
+
+    def check_invariants(self) -> None:
+        assert self.fast_used <= self.fast_capacity, "fast tier over capacity"
+        assert not (self.in_fast & ~self.allocated).any(), "unallocated page in fast"
+
+    # -- allocation ------------------------------------------------------------
+    def allocate_first_touch(self, touched: np.ndarray) -> int:
+        """Allocate newly-touched pages (fast first, then slow). Returns #new."""
+        new = np.flatnonzero(touched & ~self.allocated)
+        if len(new) == 0:
+            return 0
+        self.allocated[new] = True
+        room = self.fast_free
+        if room > 0:
+            go_fast = new[:room]
+            self.in_fast[go_fast] = True
+        return int(len(new))
+
+    # -- migration ---------------------------------------------------------------
+    def apply(self, plan: MigrationPlan) -> None:
+        """Apply demotions then promotions (HeMem frees room before filling it)."""
+        if len(plan.demote):
+            d = plan.demote
+            assert self.in_fast[d].all(), "demoting a page not in fast tier"
+            self.in_fast[d] = False
+            self.total_demoted += len(d)
+        if len(plan.promote):
+            p = plan.promote
+            assert self.allocated[p].all(), "promoting an unallocated page"
+            assert not self.in_fast[p].any(), "promoting a page already in fast tier"
+            self.in_fast[p] = True
+            self.total_promoted += len(p)
+        self.check_invariants()

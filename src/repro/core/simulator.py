@@ -1,0 +1,320 @@
+"""Epoch-based tiered-memory simulator: the black-box f(θ) the optimizer tunes.
+
+The simulator executes a :class:`~repro.core.workloads.Workload` against a
+:class:`~repro.core.engine.TieringEngine` on a :class:`Machine` and returns the
+workload's execution time.  It models, per epoch of fixed application work:
+
+* **access cost** — bandwidth-bound and latency-bound components per tier,
+  using the Table-3 machine characteristics (asymmetric NVM read/write
+  bandwidth, per-tier load latencies, thread-level memory parallelism);
+* **migration cost** — migrated bytes consume bandwidth on *both* tiers
+  (promotions read from the far tier, demotions write to it), competing with
+  application traffic; writes to in-flight pages stall on the write-protect
+  barrier (HeMem §3.2);
+* **monitoring cost** — PEBS-style sampling interrupts charge CPU time per
+  sample (the paper's deployment fix #1 reduced, but did not eliminate, this);
+  DAMON's page-table scans are far cheaper per probe;
+* **engine cost** — extra kernel time some engines burn (Memtis page
+  allocation/splitting, §4.6).
+
+Scaling: ``workload.scale`` shrinks the page count and access volume while
+*time semantics stay real*: effective bandwidth and memory-level parallelism
+shrink by the same factor, so per-page access rates, thresholds, periods and
+wall-clock times all match the full-size system.  Knobs with page-count
+semantics (``cooling_pages``, ring sizes, ``nr_regions``) are scaled when the
+engine is instantiated; see :func:`scale_config`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Mapping, Optional
+
+import numpy as np
+
+from .engine import TieringEngine, make_engine
+from .knobs import get_space
+from .pages import PAGE_BYTES, TierState
+from .workloads import Workload, make_workload
+
+CACHELINE = 64
+
+
+# ---------------------------------------------------------------------------
+# Machines — paper Table 3, plus a TPU-v5e host-offload profile for the
+# beyond-paper serving substrate.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    name: str
+    cores: int
+    near_bw_gbs: float          # fast-tier bandwidth (GB/s)
+    far_bw_read_gbs: float      # slow-tier read bandwidth (GB/s)
+    far_bw_write_gbs: float     # slow-tier write bandwidth (GB/s)
+    near_lat_ns: float
+    far_lat_ns: float
+    sample_us: float            # CPU time per PEBS sample (post-fix #1)
+    scan_us: float              # CPU time per DAMON page-table probe
+    default_threads: int
+
+    @property
+    def far_symmetric(self) -> bool:
+        return abs(self.far_bw_read_gbs - self.far_bw_write_gbs) < 1e-9
+
+
+PMEM_LARGE = Machine("pmem-large", cores=24, near_bw_gbs=138.0,
+                     far_bw_read_gbs=7.45, far_bw_write_gbs=2.25,
+                     near_lat_ns=80.0, far_lat_ns=200.0,
+                     sample_us=0.8, scan_us=0.05, default_threads=12)
+PMEM_SMALL = Machine("pmem-small", cores=16, near_bw_gbs=46.0,
+                     far_bw_read_gbs=6.8, far_bw_write_gbs=1.85,
+                     near_lat_ns=80.0, far_lat_ns=200.0,
+                     sample_us=0.8, scan_us=0.05, default_threads=4)
+NUMA = Machine("numa", cores=20, near_bw_gbs=56.0,
+               far_bw_read_gbs=36.0, far_bw_write_gbs=36.0,
+               near_lat_ns=95.0, far_lat_ns=145.0,
+               sample_us=0.8, scan_us=0.05, default_threads=12)
+#: TPU v5e chip with host-DRAM offload over PCIe: the two-tier system the
+#: production TieredKVCache manages.  "Threads" = the single decode stream;
+#: MLP comes from DMA queue depth.
+TPU_V5E_HOST = Machine("tpu-v5e-host", cores=1, near_bw_gbs=819.0,
+                       far_bw_read_gbs=16.0, far_bw_write_gbs=16.0,
+                       near_lat_ns=600.0, far_lat_ns=2500.0,
+                       sample_us=0.05, scan_us=0.05, default_threads=1)
+
+MACHINES: Dict[str, Machine] = {m.name: m for m in
+                                (PMEM_LARGE, PMEM_SMALL, NUMA, TPU_V5E_HOST)}
+
+
+def get_machine(name: str) -> Machine:
+    try:
+        return MACHINES[name]
+    except KeyError:
+        raise KeyError(f"unknown machine {name!r}; have {sorted(MACHINES)}")
+
+
+# ---------------------------------------------------------------------------
+# Config scaling (page-count-semantics knobs only; see module docstring).
+# ---------------------------------------------------------------------------
+_PAGE_SEMANTIC_KNOBS = {
+    "hemem": ("cooling_pages", "hot_ring_reqs_threshold",
+              "cold_ring_reqs_threshold"),
+    "hmsdk": ("nr_regions",),
+    "memtis": (),
+    "static": (),
+    "oracle": (),
+}
+
+
+def scale_config(engine_name: str, config: Mapping[str, Any],
+                 scale: float) -> Dict[str, Any]:
+    out = dict(config)
+    for k in _PAGE_SEMANTIC_KNOBS.get(engine_name, ()):
+        if k in out:
+            out[k] = max(1, int(round(out[k] * scale)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Simulation result
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SimResult:
+    workload: str
+    engine: str
+    machine: str
+    config: Dict[str, Any]
+    total_s: float
+    epoch_wall_ms: np.ndarray       # per-epoch wall time
+    cum_migrations: np.ndarray      # cumulative migrated pages over epochs
+    fast_hit_rate: np.ndarray       # fraction of accesses served by fast tier
+    sampling_ms: np.ndarray
+    stall_ms: np.ndarray
+    heatmap: Optional[np.ndarray] = None   # (epochs, heat_bins) access heat
+    placement: Optional[np.ndarray] = None  # (epochs, heat_bins) frac in fast
+
+    @property
+    def total_migrations(self) -> int:
+        return int(self.cum_migrations[-1]) if len(self.cum_migrations) else 0
+
+
+# ---------------------------------------------------------------------------
+# Core loop
+# ---------------------------------------------------------------------------
+def run_simulation(workload: Workload, engine_name: str,
+                   config: Optional[Mapping[str, Any]] = None,
+                   machine: Machine | str = PMEM_LARGE,
+                   fast_slow_ratio: float = 8.0,
+                   seed: int = 0,
+                   record_heatmap: bool = False,
+                   heat_bins: int = 128,
+                   fast_capacity_pages: Optional[int] = None) -> SimResult:
+    """Simulate ``workload`` under ``engine_name``/``config`` on ``machine``.
+
+    ``fast_slow_ratio`` r sets fast-tier capacity = RSS/(1+r) (the paper's
+    "1:r memory size ratio"; default 1:8, §4.1).
+    """
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    if config is None:
+        config = get_space(engine_name).default_config() \
+            if engine_name in ("hemem", "hmsdk", "memtis") else {}
+
+    n = workload.n_pages
+    scale = workload.scale
+    if fast_capacity_pages is None:
+        fast_capacity_pages = max(1, int(round(n / (1.0 + fast_slow_ratio))))
+    tier = TierState(n, fast_capacity_pages)
+    sim_cfg = scale_config(engine_name, config, scale)
+    engine = make_engine(engine_name, sim_cfg, tier, seed=seed)
+
+    threads = workload.threads
+    # effective parallel resources shrink with scale (time stays real)
+    eff_bw = scale
+    eff_par = threads * workload.mlp * scale
+    near_bw = machine.near_bw_gbs * 1e9 * eff_bw
+    far_bw_r = machine.far_bw_read_gbs * 1e9 * eff_bw
+    far_bw_w = machine.far_bw_write_gbs * 1e9 * eff_bw
+    near_lat_s = machine.near_lat_ns * 1e-9
+    far_lat_s = machine.far_lat_ns * 1e-9
+    page_bytes = tier.page_bytes
+
+    n_epochs = workload.n_epochs
+    wall = np.zeros(n_epochs)
+    cum_mig = np.zeros(n_epochs)
+    hit_rate = np.zeros(n_epochs)
+    sampling_ms_a = np.zeros(n_epochs)
+    stall_ms_a = np.zeros(n_epochs)
+    heat = np.zeros((n_epochs, heat_bins)) if record_heatmap else None
+    place = np.zeros((n_epochs, heat_bins)) if record_heatmap else None
+    bin_of = (np.arange(n) * heat_bins // n) if record_heatmap else None
+
+    # probe-cost knob: engines that sample pay per-sample CPU; DAMON pays per
+    # scan probe (engine reports its probes via samples_last_epoch).
+    probe_us = machine.scan_us if engine_name == "hmsdk" else machine.sample_us
+
+    est_wall_ms = workload.epoch_ms  # running estimate fed to the engine
+    total_mig = 0
+    for e in range(n_epochs):
+        reads, writes = workload.epoch_access(e)
+        touched = (reads + writes) > (1.0 / max(n, 1))
+        tier.allocate_first_touch(touched)
+
+        engine.observe(reads, writes, est_wall_ms)
+        plan = engine.plan(est_wall_ms, max_pages_this_epoch=_rate_cap(
+            engine, est_wall_ms, page_bytes, scale))
+        mig_pages = plan.n_pages
+        promote_idx, demote_idx = plan.promote, plan.demote
+        tier.apply(plan)
+        total_mig += mig_pages
+        cum_mig[e] = total_mig
+
+        in_fast = tier.in_fast
+        acc = reads + writes
+        acc_f = float(acc[in_fast].sum())
+        acc_s = float(acc.sum() - acc_f)
+        reads_s = float(reads[~in_fast].sum())
+        writes_s = float(writes[~in_fast].sum())
+        bytes_f = acc_f * CACHELINE
+        promote_bytes = len(promote_idx) * page_bytes
+        demote_bytes = len(demote_idx) * page_bytes
+        mig_cost_free = engine.zero_cost_migrations
+        if mig_cost_free:
+            promote_bytes = demote_bytes = 0.0
+
+        # bandwidth-bound terms (migration traffic shares the devices)
+        t_near = (bytes_f + promote_bytes + demote_bytes) / near_bw
+        t_far = ((reads_s * CACHELINE + promote_bytes) / far_bw_r
+                 + (writes_s * CACHELINE + demote_bytes) / far_bw_w)
+        # latency-bound term
+        t_lat = (acc_f * near_lat_s + acc_s * far_lat_s) / eff_par
+        t_mem = max(t_near, t_far, t_lat)
+
+        # write-protect stalls: HeMem write-protects in-flight pages, so only
+        # the writes that land *during* a page's copy window stall, each for
+        # half the copy time on average.  Expected stalled writes per page =
+        # page_write_rate x copy_duration; a stalled thread cannot overlap, so
+        # the app-level cost divides by thread count (scale-adjusted).
+        if mig_pages and not mig_cost_free:
+            w_mig = float(writes[promote_idx].sum() + writes[demote_idx].sum())
+            page_copy_s = page_bytes / max(min(far_bw_r, near_bw), 1.0)
+            epoch_s_est = max(est_wall_ms * 1e-3, page_copy_s)
+            frac_in_flight = min(page_copy_s / epoch_s_est, 1.0)
+            stall_s = (w_mig * frac_in_flight * (page_copy_s / 2.0)
+                       / max(threads * scale, 1e-9))
+        else:
+            stall_s = 0.0
+
+        sampling_s = engine.samples_last_epoch * probe_us * 1e-6 / max(threads, 1)
+        engine_s = engine.overhead_ms_last_epoch * 1e-3
+
+        wall_ms = (max(workload.compute_ms, t_mem * 1e3)
+                   + stall_s * 1e3 + sampling_s * 1e3 + engine_s * 1e3)
+        wall[e] = wall_ms
+        est_wall_ms = wall_ms
+        hit_rate[e] = acc_f / max(acc_f + acc_s, 1e-12)
+        sampling_ms_a[e] = sampling_s * 1e3
+        stall_ms_a[e] = stall_s * 1e3
+
+        if record_heatmap:
+            heat[e] = np.bincount(bin_of, weights=acc, minlength=heat_bins)
+            place[e] = (np.bincount(bin_of, weights=in_fast.astype(np.float64),
+                                    minlength=heat_bins)
+                        / np.maximum(np.bincount(bin_of, minlength=heat_bins), 1))
+
+    return SimResult(
+        workload=workload.key, engine=engine_name, machine=machine.name,
+        config=dict(config), total_s=float(wall.sum() / 1e3),
+        epoch_wall_ms=wall, cum_migrations=cum_mig, fast_hit_rate=hit_rate,
+        sampling_ms=sampling_ms_a, stall_ms=stall_ms_a,
+        heatmap=heat, placement=place)
+
+
+def _rate_cap(engine: TieringEngine, epoch_ms: float, page_bytes: int,
+              scale: float) -> int:
+    """Scaled migration-rate cap in sim pages for this epoch."""
+    rate = float(engine.config.get("max_migration_rate", 1e9))
+    return max(0, int(rate * (2 ** 30) * (epoch_ms / 1e3) / page_bytes * scale))
+
+
+# ---------------------------------------------------------------------------
+# f(θ) for the tuner
+# ---------------------------------------------------------------------------
+def evaluate(engine_name: str, config: Mapping[str, Any], workload_name: str,
+             input_name: str = "", machine: Machine | str = PMEM_LARGE,
+             threads: Optional[int] = None, scale: float = 0.25,
+             fast_slow_ratio: float = 8.0, seed: int = 0) -> float:
+    """Execution time (seconds) of one workload run — the objective of §3."""
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    t = threads if threads is not None else machine.default_threads
+    wl = make_workload(workload_name, input_name, threads=t, scale=scale,
+                       seed=seed)
+    res = run_simulation(wl, engine_name, config, machine,
+                         fast_slow_ratio=fast_slow_ratio, seed=seed)
+    return res.total_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A fully-specified tuning target: workload × input × machine × setting."""
+    workload: str
+    input_name: str = ""
+    machine: str = "pmem-large"
+    threads: Optional[int] = None
+    scale: float = 0.25
+    fast_slow_ratio: float = 8.0
+    seed: int = 0
+
+    def objective(self, engine_name: str):
+        def f(config: Mapping[str, Any]) -> float:
+            return evaluate(engine_name, config, self.workload,
+                            self.input_name, self.machine, self.threads,
+                            self.scale, self.fast_slow_ratio, self.seed)
+        return f
+
+    @property
+    def key(self) -> str:
+        inp = f":{self.input_name}" if self.input_name else ""
+        return f"{self.workload}{inp}@{self.machine}"

@@ -1,0 +1,124 @@
+"""TieredParamStore — MoE expert offload driven by the tiering engine.
+
+kimi-k2's 384-expert layers hold ~1 T parameters; at bf16 that exceeds a
+256-chip v5e pod's HBM once optimizer state is counted, so cold experts live
+in host DRAM and hot experts in HBM.  The access signal is the router: every
+batch's expert-selection counts are the "reads" (there are no writes during
+serving; during training the gradient updates are the writes).
+
+Mechanism reuse is verbatim HeMem: thresholds decide which experts are hot,
+cooling ages the counts, and the migration thread swaps expert blocks at a
+bounded rate.  Tokens routed to host-resident experts take the slow path
+(host roundtrip) — the latency penalty the tuner minimizes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import HeMemEngine
+from repro.core.knobs import HEMEM_SPACE
+from repro.core.pages import TierState
+
+
+class TieredParamStore:
+    def __init__(self, expert_weights: Dict[str, np.ndarray],
+                 hbm_experts: int,
+                 config: Optional[Mapping[str, Any]] = None, seed: int = 0):
+        """expert_weights: dict of (E, ...) arrays sharing leading dim E."""
+        first = next(iter(expert_weights.values()))
+        self.n_experts = first.shape[0]
+        self.hbm_experts = int(hbm_experts)
+        self.host = {k: np.asarray(v, np.float32)
+                     for k, v in expert_weights.items()}
+        bytes_per_expert = sum(v[0].nbytes for v in self.host.values())
+
+        self.slot_of = np.full(self.n_experts, -1, np.int64)
+        self.expert_of_slot = np.full(self.hbm_experts, -1, np.int64)
+        self.hbm: Dict[str, jnp.ndarray] = {
+            k: jnp.zeros((self.hbm_experts,) + v.shape[1:], jnp.bfloat16)
+            for k, v in self.host.items()}
+
+        cfg = HEMEM_SPACE.validate(dict(config or {}))
+        self.tier = TierState(self.n_experts, self.hbm_experts,
+                              page_bytes=max(bytes_per_expert, 1))
+        self.tier.allocated[:] = True
+        self.engine = HeMemEngine(cfg, self.tier, seed=seed)
+        self._counts = np.zeros(self.n_experts)
+        self.migrations = 0
+        self.slow_hits = 0
+        self.fast_hits = 0
+
+        # first-touch: most-frequently-initialized experts... start 0..cap
+        for e in range(min(self.hbm_experts, self.n_experts)):
+            self._promote(e)
+
+    # -- access accounting -----------------------------------------------------
+    def route(self, expert_ids: np.ndarray):
+        """Record a batch's routing decisions; returns per-expert residency
+        mask for the batch's experts."""
+        ids, cnt = np.unique(np.asarray(expert_ids).ravel(),
+                             return_counts=True)
+        self._counts[ids] += cnt
+        resident = self.slot_of[ids] >= 0
+        self.fast_hits += int(cnt[resident].sum())
+        self.slow_hits += int(cnt[~resident].sum())
+        return {int(e): bool(r) for e, r in zip(ids, resident)}
+
+    def gather(self, name: str, expert_ids: np.ndarray) -> jnp.ndarray:
+        """Fetch weights for ``expert_ids``: HBM-resident from the device
+        pool, the rest via host roundtrip (the measured slow path)."""
+        out = []
+        for e in np.asarray(expert_ids).ravel():
+            slot = self.slot_of[int(e)]
+            if slot >= 0:
+                out.append(self.hbm[name][int(slot)])
+            else:
+                out.append(jnp.asarray(self.host[name][int(e)],
+                                       jnp.bfloat16))
+        return jnp.stack(out)
+
+    # -- tiering ------------------------------------------------------------------
+    def step_engine(self, dt_ms: float):
+        reads = self._counts.copy()
+        self._counts[:] = 0.0
+        self.engine.observe(reads, np.zeros_like(reads), dt_ms)
+        plan = self.engine.plan(dt_ms,
+                                max_pages_this_epoch=self.hbm_experts)
+        for e in plan.demote:
+            self._demote(int(e))
+        for e in plan.promote:
+            if self.tier.fast_free <= 0:
+                break
+            self._promote(int(e))
+        self.migrations += plan.n_pages
+
+    def _promote(self, e: int):
+        if self.slot_of[e] >= 0:
+            return
+        free = np.flatnonzero(self.expert_of_slot < 0)
+        if len(free) == 0:
+            return
+        slot = int(free[0])
+        for k in self.hbm:
+            self.hbm[k] = self.hbm[k].at[slot].set(
+                jnp.asarray(self.host[k][e], jnp.bfloat16))
+        self.slot_of[e] = slot
+        self.expert_of_slot[slot] = e
+        self.tier.in_fast[e] = True
+
+    def _demote(self, e: int):
+        slot = int(self.slot_of[e])
+        if slot < 0:
+            return
+        self.slot_of[e] = -1
+        self.expert_of_slot[slot] = -1
+        self.tier.in_fast[e] = False
+
+    def hit_rate(self) -> float:
+        tot = self.fast_hits + self.slow_hits
+        return self.fast_hits / max(tot, 1)

@@ -1,0 +1,71 @@
+"""Mesh-axis conventions + sharding-spec resolution.
+
+Physical mesh axes:
+  single pod:  ("data", "model")           = (16, 16) on v5e
+  multi-pod:   ("pod", "data", "model")    = (2, 16, 16)
+
+Logical convention used by every layer's specs:
+  "data"  — DP/FSDP: batch + parameter sharding (ZeRO-3 style; XLA SPMD
+            inserts the all-gathers / reduce-scatters)
+  "model" — TP/EP: attention heads, MLP hidden, expert and vocab dims
+  "pod"   — outer data parallelism: batch is additionally split across pods;
+            parameters are replicated per pod, so gradients all-reduce over
+            DCN (optionally EF-int8-compressed, see optim.compressed_psum)
+
+Params never mention "pod": unlisted mesh axes replicate, which is exactly
+the per-pod replica layout.  Batches shard over ("pod","data") jointly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    return P(dp_axes(mesh), *([None] * extra_dims))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, specs):
+    """Map a pytree of PartitionSpecs to NamedShardings."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def abstract_params(init_fn, key, cfg, mesh: Mesh, specs):
+    """Shape-only params with shardings attached (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_fn(k, cfg)[0], key)
+    sh = tree_shardings(mesh, specs)
+    return jax.tree.map(
+        lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+        shapes, sh)
+
+
+def validate_divisibility(cfg, shape, mesh: Mesh) -> Optional[str]:
+    """Explain-early check: does this (arch x shape x mesh) cell divide?"""
+    dp = dp_size(mesh)
+    if shape.global_batch % dp and shape.global_batch >= dp:
+        return f"global_batch {shape.global_batch} % dp {dp} != 0"
+    return None

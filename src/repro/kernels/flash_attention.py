@@ -1,0 +1,122 @@
+"""Pallas TPU flash attention (tiled online softmax).
+
+Target: TPU MXU/VMEM. Grid = (B*KV_heads, n_q_blocks, n_kv_blocks); the kv
+axis is the innermost (sequential on TPU), so the online-softmax state
+(m, l, acc) lives in VMEM scratch and is carried across kv steps.
+
+BlockSpec tiling:
+  q:   (1, block_q, G, D)   — one kv-head group of query rows
+  k/v: (1, block_k, D)      — one kv block
+  out: (1, block_q, G, D)
+Working set ~ block_q*G*D + 2*block_k*D + scratch ≈ 2-4 MiB for the default
+block_q = block_k = 128, G <= 16, D <= 256 — sized for ~16 MiB VMEM.
+
+Supports causal masking, sliding windows and logit softcap (gemma2).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, softcap: float, block_q: int,
+            block_k: int, seq_len: int, kv_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, G, D)
+    k = k_ref[0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0].astype(jnp.float32)          # (bk, D)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    s = jnp.einsum("qgd,kd->qgk", q * scale, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, 1, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, 1, block_k), 2)
+    mask = (k_pos < kv_len) & (q_pos < seq_len)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (bq, G)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(axis=-1)
+    acc = acc_scr[...] * corr[..., None] + jnp.einsum(
+        "qgk,kd->qgd", p, v, preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq, bk = min(block_q, S), min(block_k, T)
+
+    qr = q.reshape(B, S, KV, G, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B * KV, S, G, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+
+    nq = pl.cdiv(S, bq)
+    nk = pl.cdiv(T, bk)
+    grid = (B * KV, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, window=window,
+                          softcap=logit_softcap, block_q=bq, block_k=bk,
+                          seq_len=S, kv_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, G, D), lambda h, i, j: (h, i, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, G, D), lambda h, i, j: (h, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, S, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, G), jnp.float32),
+            pltpu.VMEM((bq, G), jnp.float32),
+            pltpu.VMEM((bq, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KV, S, G, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, S, H, D)

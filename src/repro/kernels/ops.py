@@ -1,0 +1,71 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled Pallas kernels run natively; on CPU (this container,
+including the multi-pod dry-run) the same math executes through the pure-jnp
+reference implementations, which share the online-softmax block structure —
+so tests exercise the kernels in interpret mode against the refs, while
+models remain portable.
+
+Set ``FORCE = "pallas" | "ref"`` to pin a path (tests use "pallas" with
+interpret mode; the dry-run uses "ref" so the lowered HLO stays analyzable
+by cost_analysis).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as R
+
+FORCE: Optional[str] = None
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _use_pallas() -> bool:
+    if FORCE == "pallas":
+        return True
+    if FORCE == "ref":
+        return False
+    return _on_tpu()
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0):
+    if _use_pallas():
+        from .flash_attention import flash_attention as fa
+        return fa(q, k, v, causal=causal, window=window,
+                  logit_softcap=logit_softcap, interpret=not _on_tpu())
+    return R.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                 logit_softcap=logit_softcap)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    logit_softcap: float = 0.0):
+    if _use_pallas() and logit_softcap == 0.0:
+        from .paged_attention import paged_attention as pa
+        return pa(q, k_pages, v_pages, block_table, lengths,
+                  interpret=not _on_tpu())
+    return R.paged_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                                 logit_softcap=logit_softcap)
+
+
+def page_migrate(dst_pool, src_pool, dst_ids, src_ids):
+    if _use_pallas():
+        from .page_migrate import page_migrate as pm
+        return pm(dst_pool, src_pool, dst_ids, src_ids,
+                  interpret=not _on_tpu())
+    return R.page_migrate_ref(dst_pool, src_pool, dst_ids, src_ids)
+
+
+def hotness_update(counts, page_ids, *, cool: bool, hot_threshold: float):
+    return R.hotness_update_ref(counts, page_ids, cool=cool,
+                                hot_threshold=hot_threshold)

@@ -1,0 +1,59 @@
+"""Pallas TPU page-migration kernel: the tiering engine's datapath.
+
+Executes one migration plan (promote + demote lists) as a single batched
+page gather/scatter over the two pools.  The page ids are scalar-prefetched
+so the BlockSpec index_maps perform the indirection; each grid step streams
+one page (page_elems row) through VMEM.
+
+On a real system the source pool rows live in host memory and arrive via DMA;
+here both pools are device arrays and the kernel is the device-side half of
+the copy (the host side is jax.device_put with donation, see
+core/tiered_kv.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dst_ids, src_ids, src_ref, dst_in_ref, dst_ref):
+    i = pl.program_id(0)
+    valid = (dst_ids[i] >= 0) & (src_ids[i] >= 0)
+    row = jnp.where(valid, src_ref[0], dst_in_ref[0])
+    dst_ref[0] = row.astype(dst_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0,))
+def page_migrate(dst_pool, src_pool, dst_ids, src_ids, *,
+                 interpret: bool = True):
+    """dst/src_pool: (P, page_elems); ids: (N,) int32, -1 = no-op.
+    Returns the updated dst_pool (buffer donated/aliased)."""
+    N = src_ids.shape[0]
+    page_elems = dst_pool.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, page_elems),
+                         lambda i, d, s: (jnp.maximum(s[i], 0), 0)),
+            pl.BlockSpec((1, page_elems),
+                         lambda i, d, s: (jnp.maximum(d[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page_elems),
+                               lambda i, d, s: (jnp.maximum(d[i], 0), 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(dst_ids.astype(jnp.int32), src_ids.astype(jnp.int32),
+      src_pool, dst_pool)

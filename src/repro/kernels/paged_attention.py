@@ -1,0 +1,114 @@
+"""Pallas TPU paged decode attention over the TieredKVCache HBM pool.
+
+One new token per sequence attends over that sequence's pages, located via a
+block table (scalar-prefetched so the BlockSpec index_map can do the
+indirection — the pattern TPU paged attention uses instead of GPU
+gather-from-global).
+
+Grid = (B * KV_heads, pages_per_seq); page axis innermost/sequential with
+online-softmax scratch carried across pages.
+
+BlockSpec tiling:
+  q:       (1, G, D)           one head-group row for one sequence
+  k/v:     (1, page, D)        one pooled page for one kv head
+  out:     (1, G, D)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page: int, kv_heads: int):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    b = bh // kv_heads
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)           # (G, D)
+    k = k_ref[0].astype(jnp.float32)           # (page, D)
+    v = v_ref[0].astype(jnp.float32)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    s = jnp.einsum("gd,pd->gp", q * scale, k,
+                   preferred_element_type=jnp.float32)
+    length = lengths_ref[b]
+    page_id = table_ref[b, j]
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+    valid = (pos < length) & (page_id >= 0)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(axis=-1)
+    acc = acc_scr[...] * corr[:, None] + jnp.einsum(
+        "gp,pd->gd", p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, lengths,
+                    *, interpret: bool = True):
+    """q: (B,H,D); k/v_pages: (P,page,KV,D); block_table: (B,ppseq);
+    lengths: (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    Pn, page, KV, _ = k_pages.shape
+    G = H // KV
+    ppseq = block_table.shape[1]
+
+    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kr = k_pages.transpose(0, 2, 1, 3).reshape(Pn * KV, page, D)
+    vr = v_pages.transpose(0, 2, 1, 3).reshape(Pn * KV, page, D)
+
+    def kv_index(bh, j, table, lengths):
+        b = bh // KV
+        h = bh % KV
+        pid = jnp.maximum(table[b, j], 0)
+        return (pid * KV + h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, ppseq),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, j, table, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, page, D), kv_index),
+            pl.BlockSpec((1, page, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, G, D),
+                               lambda bh, j, table, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page=page, kv_heads=KV),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, KV, G, D).reshape(B, H, D)

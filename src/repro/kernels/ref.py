@@ -1,0 +1,152 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests assert against, and also the
+portable path used when running on CPU (including the dry-run lowering): the
+flash reference uses the same online-softmax block recurrence as the kernel,
+so its memory behaviour — O(S·block) instead of O(S²) — and FLOP profile
+match what the TPU kernel does.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# flash attention (training/prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        logit_softcap: float = 0.0,
+                        block_kv: int = 512) -> jnp.ndarray:
+    """Online-softmax attention. q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = (q.reshape(B, S, KV, G, D).astype(jnp.float32)) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    q_pos = jnp.arange(S)
+
+    nblk = max(1, math.ceil(T / block_kv))
+    Tpad = nblk * block_kv
+    kf = jnp.pad(kf, ((0, 0), (0, Tpad - T), (0, 0), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, Tpad - T), (0, 0), (0, 0)))
+
+    def body(carry, blk_idx):
+        m, l, acc = carry
+        start = blk_idx * block_kv
+        kb = jax.lax.dynamic_slice_in_dim(kf, start, block_kv, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vf, start, block_kv, axis=1)
+        k_pos = start + jnp.arange(block_kv)
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, kb)
+        s = _softcap(s, logit_softcap)
+        mask = (k_pos[None, :] < T)[None, None, None]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])[None, :, None, None]
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)[None, :, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nblk))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (the TieredKVCache HBM side)
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                        *, logit_softcap: float = 0.0) -> jnp.ndarray:
+    """Decode attention over a paged KV pool.
+
+    q:           (B, H, D)         one new token per sequence
+    k/v_pages:   (P, page, KV, D)  global page pool
+    block_table: (B, pages_per_seq) int32 page ids (-1 = unused)
+    lengths:     (B,)              current sequence lengths
+    -> (B, H, D)
+    """
+    B, H, D = q.shape
+    Pn, page, KV, _ = k_pages.shape
+    G = H // KV
+    ppseq = block_table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    table = jnp.maximum(block_table, 0)
+    kk = k_pages[table]          # (B, ppseq, page, KV, D)
+    vv = v_pages[table]
+    kk = kk.reshape(B, ppseq * page, KV, D).astype(jnp.float32)
+    vv = vv.reshape(B, ppseq * page, KV, D).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kk)
+    s = _softcap(s, logit_softcap)
+    pos = jnp.arange(ppseq * page)[None]
+    valid = (pos < lengths[:, None]) & \
+        (block_table[:, pos[0] // page] >= 0)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vv) \
+        / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# page migration (gather/scatter datapath of the tiering engine)
+# ---------------------------------------------------------------------------
+
+def page_migrate_ref(dst_pool, src_pool, dst_ids, src_ids):
+    """Copy pages src_pool[src_ids] -> dst_pool[dst_ids]; -1 ids are no-ops.
+
+    pools: (P, page_elems) — returns updated dst_pool.
+    """
+    n = src_ids.shape[0]
+    valid = (src_ids >= 0) & (dst_ids >= 0)
+    src = jnp.where(valid, src_ids, 0)
+    dst = jnp.where(valid, dst_ids, 0)
+    rows = src_pool[src]
+    current = dst_pool[dst]
+    rows = jnp.where(valid[:, None], rows, current)
+    return dst_pool.at[dst].set(rows)
+
+
+# ---------------------------------------------------------------------------
+# hotness update (access counting + threshold classification)
+# ---------------------------------------------------------------------------
+
+def hotness_update_ref(counts, page_ids, *, cool: bool,
+                       hot_threshold: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter-add sampled accesses into per-page counters, optionally halve
+    (cooling), and classify.  counts: (P,), page_ids: (N,) (-1 = no sample).
+    Returns (new_counts, hot_mask)."""
+    valid = page_ids >= 0
+    ids = jnp.where(valid, page_ids, 0)
+    upd = jnp.zeros_like(counts).at[ids].add(
+        valid.astype(counts.dtype))
+    new = (counts + upd) * (0.5 if cool else 1.0)
+    return new, new >= hot_threshold

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this produces, without allocating any model-sized buffer:
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective_bytes            — parsed from compiled.as_text()
+and writes benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+      --shape train_4k --mesh single                               # one cell
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, all_arch_ids
+from repro.distributed import (batch_spec, dp_axes, dp_size, tree_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import SHAPES, ModelConfig
+from repro.models.registry import extra_shape, shape_applicable
+from repro.optim import cosine_schedule, make_optimizer
+from repro.serve.step import build_prefill_step, build_serve_step
+from repro.train.step import auto_microbatches, build_train_step
+from repro.kernels import ops as kops
+
+RESULTS = os.path.join(os.path.dirname(__file__),
+                       "../../../benchmarks/results/dryrun")
+
+# the dry-run lowers the portable reference attention path: its HLO is what
+# cost_analysis can price (the Pallas kernels are TPU-runtime objects)
+kops.FORCE = "ref"
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES.get(dt, 2)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "<shape> <name> = <op>(...)" — match the op on the rhs
+        m = re.match(r"^(?:ROOT )?[%\w.\-]+ = (.*?) ([a-z0-9\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            if op.startswith(kind):
+                shapes = _SHAPE_RE.finditer(m.group(1))
+                b = sum(_shape_bytes(x) for x in shapes)
+                per_kind[kind] += b
+                count[kind] += 1
+    total = sum(per_kind.values())
+    return total, per_kind, count
+
+
+def widen_dp(tree, mesh):
+    """Activation/cache specs name only 'data'; on the multi-pod mesh the
+    batch dimension also spans 'pod'."""
+    if "pod" not in mesh.axis_names:
+        return tree
+
+    def fix(spec):
+        if not isinstance(spec, P):
+            return spec
+        parts = tuple(("pod", "data") if a == "data" else a for a in spec)
+        return P(*parts)
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract(tree_shapes, tree_specs, mesh):
+    sh = tree_shardings(mesh, tree_specs)
+    return jax.tree.map(
+        lambda s, d: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=d),
+        tree_shapes, sh)
+
+
+def input_specs(cfg: ModelConfig, shape, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bs = batch_spec(mesh)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                               sharding=NamedSharding(mesh, P(*bs)))
+    batch = {"tokens": tok, "labels": tok}
+    es = extra_shape(cfg, B)
+    if es is not None:
+        batch["extra"] = jax.ShapeDtypeStruct(
+            es, jnp.float32,
+            sharding=NamedSharding(mesh, P(bs[0], *([None] * (len(es) - 1)))))
+    return batch
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               smoke: bool = False):
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": ("long_500k needs sub-quadratic attention; "
+                            f"{arch} is full-attention (see DESIGN.md)")}
+
+    key = jax.random.PRNGKey(0)
+    param_shapes, specs = T.shape_init(key, cfg)
+    params_abs = abstract(param_shapes, specs, mesh)
+
+    if shape.kind == "train":
+        opt_name = "adafactor" if cfg.param_count() > 3e11 else "adamw"
+        opt = make_optimizer(opt_name, cosine_schedule(3e-4, 100, 10000))
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        opt_abs = abstract(opt_shapes, opt.state_specs(specs), mesh)
+        from repro.train.step import TrainState
+        state_abs = TrainState(params_abs, opt_abs,
+                               jax.ShapeDtypeStruct(
+                                   (), jnp.int32,
+                                   sharding=NamedSharding(mesh, P())))
+        n_micro = int(os.environ.get("REPRO_N_MICRO", "0")) or \
+            auto_microbatches(cfg, shape.global_batch, shape.seq_len,
+                              dp_size(mesh))
+        step = build_train_step(cfg, opt, n_micro=n_micro, use_flash=False)
+        batch = input_specs(cfg, shape, mesh)
+        fn = jax.jit(step, donate_argnums=(0,))
+        args = (state_abs, batch)
+        extra_info = {"optimizer": opt_name, "n_micro": n_micro,
+                      "step_kind": "train_step"}
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg, use_flash=False)
+        batch = input_specs(cfg, shape, mesh)
+        fn = jax.jit(step)
+        args = (params_abs, batch)
+        extra_info = {"step_kind": "prefill_step"}
+    else:  # decode
+        B = shape.global_batch
+        cache_shapes = jax.eval_shape(
+            lambda: T.decode_init(cfg, B, shape.seq_len)[0])
+        _, cache_specs = T.decode_init(cfg, 1, 8)   # tiny concrete: specs only
+        if B % dp_size(mesh) == 0:
+            cache_specs = widen_dp(cache_specs, mesh)
+            bs = P(*batch_spec(mesh))
+        else:
+            # long_500k runs batch=1: replicate the batch dim ("data" only
+            # ever marks the batch axis in cache specs), keep the model-axis
+            # sequence sharding
+            cache_specs = jax.tree.map(
+                lambda s: P(*(None if a == "data" else a for a in tuple(s)))
+                if isinstance(s, P) else s,
+                cache_specs, is_leaf=lambda x: isinstance(x, P))
+            bs = P(None)
+        cache_abs = abstract(cache_shapes, cache_specs, mesh)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                   sharding=NamedSharding(mesh, bs))
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        step = build_serve_step(cfg)
+        fn = jax.jit(step, donate_argnums=(3,))
+        args = (params_abs, tok, pos, cache_abs)
+        extra_info = {"step_kind": "serve_step",
+                      "kv_len": shape.seq_len}
+
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not implement it fully
+        mem["error"] = repr(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k, v in (ca or {}).items():
+            if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed")):
+                cost[k] = float(v)
+    except Exception as e:
+        cost["error"] = repr(e)
+
+    hlo = compiled.as_text()
+    coll_total, coll_kind, coll_count = collective_bytes(hlo)
+
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem, "cost_analysis": cost,
+        "collective_bytes_total": coll_total,
+        "collective_bytes": coll_kind,
+        "collective_count": coll_count,
+        "hlo_lines": hlo.count("\n"),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        **extra_info,
+    }
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI sanity)")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable the beyond-paper perf changes (sequence "
+                         "parallelism + dp-sharded MoE dispatch buffers); "
+                         "results tagged __opt")
+    args = ap.parse_args(argv)
+
+    if args.opt:
+        from repro.models import transformer as TT, layers as LL
+        if os.environ.get("REPRO_OPT_SP", "1") == "1":
+            TT.set_activation_sharding(P("data", "model", None))
+        if os.environ.get("REPRO_OPT_MOE", "1") == "1":
+            LL.set_moe_buffer_sharding(P("model", "data", None))
+
+    archs = all_arch_ids() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(RESULTS, exist_ok=True)
+    failures = []
+    suffix = "__opt" if args.opt else ""
+    suffix += os.environ.get("REPRO_TAG", "")
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name, mesh in meshes:
+                tag = f"{arch}__{shape_name}__{mesh_name}{suffix}"
+                t0 = time.time()
+                try:
+                    with mesh:
+                        res = lower_cell(arch, shape_name, mesh, mesh_name,
+                                         smoke=args.smoke)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": repr(e)}
+                    failures.append(tag)
+                out = os.path.join(RESULTS, f"{tag}.json")
+                with open(out, "w") as f:
+                    json.dump(res, f, indent=2)
+                status = ("SKIP" if "skipped" in res else
+                          "FAIL" if "error" in res else "OK")
+                extra = ""
+                if status == "OK":
+                    fl = res["cost_analysis"].get("flops", 0)
+                    extra = (f" flops={fl:.3g}"
+                             f" coll={res['collective_bytes_total']:.3g}B"
+                             f" compile={res['compile_s']}s")
+                print(f"[{status}] {tag}{extra} ({time.time() - t0:.0f}s)",
+                      flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILED cells: {failures}")
+        return 1
+    print("\nALL CELLS LOWERED+COMPILED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant Trainer on the local devices (CPU here, TPU slice in
+production — the same pjit path the dry-run proves out at 256/512 chips).
+Smoke-scale by default; ``--full`` uses the published config (TPU-sized).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import all_arch_ids, get_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b",
+                    help=f"one of: {', '.join(all_arch_ids())}")
+    ap.add_argument("--full", action="store_true",
+                    help="published config (needs a real TPU slice)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--optimizer", default=None,
+                    help="adamw|adafactor (default: auto by size)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 production mesh (requires 256 devices)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    opt = args.optimizer or (
+        "adafactor" if cfg.param_count() > 3e11 else "adamw")
+    mesh = make_production_mesh() if args.production_mesh \
+        else make_local_mesh()
+    print(f"{cfg.arch}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"optimizer={opt}, mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    tr = Trainer(cfg, mesh, args.workdir, global_batch=args.batch,
+                 seq_len=args.seq, total_steps=args.steps, lr=args.lr,
+                 ckpt_every=max(10, args.steps // 4), optimizer=opt)
+    out = tr.run()
+    for m in out["metrics"]:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.2f}  {m['dt'] * 1e3:.0f}ms")
+    print(f"done at step {out['final_step']}; "
+          f"stragglers detected: {len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .registry import get_model, list_archs
+
+__all__ = ["get_model", "list_archs"]

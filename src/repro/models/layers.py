@@ -1,0 +1,574 @@
+"""Neural-net layer library (pure JAX, no flax) for the 10 assigned archs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function returns ``(params, specs)`` where ``specs`` mirrors the params tree
+with :class:`jax.sharding.PartitionSpec` leaves using *logical* mesh axis
+names ``"data"`` (DP/FSDP) and ``"model"`` (TP/EP); the launcher resolves
+them against the physical mesh (adding the ``"pod"`` axis for multi-pod).
+
+Block types: GQA attention (full / sliding-window / alternating local-global,
+logit softcap, RoPE incl. partial/"2d"), SwiGLU & GeLU MLPs, top-k MoE with
+sort-based dropless dispatch (EP over "model"), RG-LRU (recurrentgemma),
+sLSTM / mLSTM (xLSTM), and cross-attention (whisper decoder, llama-vision).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# utilities
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.uniform(key, (d_in, d_out), jnp.float32,
+                               -scale, scale)).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(dt)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               rotary_dim: Optional[int] = None):
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    return inv  # (rd/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0,
+               rotary_frac: float = 1.0):
+    """x: (..., S, H, D); positions: (..., S).  ``rotary_frac < 1`` rotates
+    only the first fraction of dims (chatglm's 2d/partial RoPE)."""
+    D = x.shape[-1]
+    rd = int(D * rotary_frac)
+    rd -= rd % 2
+    if rd == 0:
+        return x
+    inv = rope_freqs(D, theta, rd)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; causal / sliding-window / cross)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    rotary_frac: float = 1.0
+    window: int = 0              # 0 = full attention; >0 = sliding window
+    logit_softcap: float = 0.0   # 0 = off (gemma2 uses 50.0)
+    causal: bool = True
+    use_rope: bool = True
+    qk_norm: bool = False
+
+
+def attn_init(key, cfg: AttnCfg, dtype=jnp.bfloat16) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    params = {
+        "wq": dense_init(ks[0], cfg.d_model, qd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, kvd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, kvd, dtype),
+        "wo": dense_init(ks[3], qd, cfg.d_model, dtype),
+    }
+    specs = {
+        "wq": P("data", "model"), "wk": P("data", "model"),
+        "wv": P("data", "model"), "wo": P("model", "data"),
+    }
+    return params, specs
+
+
+def _sdpa(q, k, v, *, causal, window, cap, q_pos, k_pos, dtype):
+    """q: (B,S,H,D), k/v: (B,T,KV,D) — grouped-query attention core."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S, KV, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if cap > 0:
+        logits = softcap(logits, cap)
+    mask = jnp.ones((S, k.shape[1]), dtype=bool) if not causal else \
+        (k_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, D)
+
+
+def attn_apply(params: Params, cfg: AttnCfg, x, positions,
+               kv_cache: Optional[Tuple] = None,
+               cross_kv: Optional[Tuple] = None,
+               use_flash: bool = True):
+    """Returns (out, new_kv_cache).
+
+    * training/prefill: ``kv_cache=None`` -> full self-attention over x.
+    * decode: ``kv_cache=(k_buf, v_buf, length)`` -> append, attend.
+    * cross-attention: ``cross_kv=(k, v)`` precomputed from the encoder.
+    """
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    if cross_kv is not None:
+        k, v = cross_kv
+        T = k.shape[1]
+        out = _sdpa(q, k, v, causal=False, window=0, cap=cfg.logit_softcap,
+                    q_pos=jnp.arange(S), k_pos=jnp.arange(T), dtype=x.dtype)
+        return out.reshape(B, S, H * D) @ params["wo"], None
+
+    k = (x @ params["wk"]).reshape(B, S, KV, D)
+    v = (x @ params["wv"]).reshape(B, S, KV, D)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_frac)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_frac)
+
+    if kv_cache is None:
+        if use_flash and S >= 512 and S * B <= (1 << 22):
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(
+                q, k, v, causal=cfg.causal, window=cfg.window,
+                logit_softcap=cfg.logit_softcap)
+        else:
+            out = _sdpa(q, k, v, causal=cfg.causal, window=cfg.window,
+                        cap=cfg.logit_softcap, q_pos=positions[0],
+                        k_pos=positions[0], dtype=x.dtype)
+        return out.reshape(B, S, H * D) @ params["wo"], None
+
+    # ---- decode: append to cache then attend over it ----
+    # Sliding-window layers use the buffer as a ring (T == window): softmax
+    # is permutation-invariant and keys carry their RoPE phase from write
+    # time, so slot order does not matter.
+    k_buf, v_buf, length = kv_cache
+    T = k_buf.shape[1]
+    idx = length % T
+    k_buf = jax.lax.dynamic_update_slice(k_buf, k.astype(k_buf.dtype),
+                                         (0, idx, 0, 0))
+    v_buf = jax.lax.dynamic_update_slice(v_buf, v.astype(v_buf.dtype),
+                                         (0, idx, 0, 0))
+    k_pos = jnp.arange(T)
+    valid = (k_pos <= length) | (length >= T)
+    if cfg.window > 0 and T > cfg.window:
+        valid = valid & (k_pos > length - cfg.window)
+    qg = q.reshape(B, S, KV, H // KV, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_buf).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(D)
+    if cfg.logit_softcap > 0:
+        logits = softcap(logits, cfg.logit_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_buf).reshape(B, S, H * D)
+    return out @ params["wo"], (k_buf, v_buf, length + S)
+
+
+def kv_cache_init(cfg: AttnCfg, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+            jnp.zeros((), jnp.int32))
+
+
+def kv_cache_specs(decode_seq_shard: bool = True):
+    """KV buffers: batch over data, cached sequence over model (distributed
+    flash-decode: partial softmax terms are combined by XLA collectives)."""
+    seq = "model" if decode_seq_shard else None
+    return (P("data", seq, None, None), P("data", seq, None, None), P())
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, kind: str = "swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        params = {"w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+                  "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+                  "w_down": dense_init(ks[2], d_ff, d_model, dtype)}
+        specs = {"w_gate": P("data", "model"), "w_up": P("data", "model"),
+                 "w_down": P("model", "data")}
+    else:  # gelu
+        params = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+                  "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+        specs = {"w_up": P("data", "model"), "w_down": P("model", "data")}
+    return params, specs
+
+
+def mlp_apply(params: Params, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ params["w_gate"]) *
+                (x @ params["w_up"])) @ params["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ params["w_gate"], approximate=True) *
+                (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — top-k, sort-based dropless-ish dispatch, EP over
+# "model".  Expert tensors: (E, d_model, d_ff) with E sharded.
+# ---------------------------------------------------------------------------
+
+def moe_init(key, d_model, d_ff, n_experts, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    def einit(k, shape, fan_in):
+        scale = 1.0 / math.sqrt(fan_in)
+        return jax.random.uniform(k, shape, jnp.float32, -scale,
+                                  scale).astype(dtype)
+    params = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_gate": einit(ks[1], (n_experts, d_model, d_ff), d_model),
+        "w_up": einit(ks[2], (n_experts, d_model, d_ff), d_model),
+        "w_down": einit(ks[3], (n_experts, d_ff, d_model), d_ff),
+    }
+    specs = {
+        "router": P("data", None),
+        "w_gate": P("model", "data", None),
+        "w_up": P("model", "data", None),
+        "w_down": P("model", None, "data"),
+    }
+    return params, specs
+
+
+#: perf iteration #3 (EXPERIMENTS.md §Perf): constrain the (E, C, D) expert
+#: buffers to also shard C over the DP axis so the dispatch scatter lowers
+#: to reduce-scatter instead of a full all-reduce of the buffer.
+MOE_BUFFER_SPEC = None
+
+
+def set_moe_buffer_sharding(spec):
+    global MOE_BUFFER_SPEC
+    MOE_BUFFER_SPEC = spec
+
+
+def moe_apply(params: Params, x, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss."""
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = (xf.astype(jnp.float32) @ params["router"])   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- dispatch: sort token-slots by expert, take first C per expert ---
+    # small token counts (decode steps, smoke tests) run dropless; large
+    # training microbatches use GShard-style capacity
+    if T * top_k <= 4096:
+        C = T * top_k
+    else:
+        C = max(top_k, int(T * top_k * capacity_factor / n_experts))
+    slot_expert = gate_idx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(slot_expert)                         # stable
+    sorted_expert = slot_expert[order]
+    # position of each sorted slot within its expert
+    same = jnp.cumsum(
+        jax.nn.one_hot(sorted_expert, n_experts, dtype=jnp.int32), axis=0)
+    pos_sorted = same[jnp.arange(T * top_k), sorted_expert] - 1
+    keep = pos_sorted < C
+    token_sorted = order // top_k
+
+    # scatter tokens into (E, C, D) buffers
+    buf = jnp.zeros((n_experts, C, D), x.dtype)
+    e_idx = jnp.where(keep, sorted_expert, 0)
+    c_idx = jnp.where(keep, pos_sorted, 0)
+    contrib = jnp.where(keep[:, None], xf[token_sorted], 0.0)
+    buf = buf.at[e_idx, c_idx].add(contrib.astype(x.dtype))
+    if MOE_BUFFER_SPEC is not None and C % 8 == 0:
+        buf = jax.lax.with_sharding_constraint(buf, MOE_BUFFER_SPEC)
+
+    # expert computation (EP: E sharded over "model")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, D)
+
+    # combine: gather back per slot, weight by gate value
+    slot_out = out_buf[e_idx, c_idx]                          # (T*k, D)
+    slot_out = jnp.where(keep[:, None], slot_out, 0.0)
+    gate_sorted = gate_vals.reshape(-1)[order]
+    weighted = slot_out * gate_sorted[:, None].astype(slot_out.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[token_sorted].add(
+        weighted.astype(x.dtype))
+
+    # aux loss (Switch-style load balancing)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], n_experts), axis=0)
+    router_mean = probs.mean(0)
+    aux = n_experts * jnp.sum(density * router_mean)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma) — gated linear recurrence via associative scan
+# ---------------------------------------------------------------------------
+
+def rglru_init(key, d_model, d_rnn, n_heads, conv_width=4, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_x": dense_init(ks[0], d_model, d_rnn, dtype),
+        "w_y": dense_init(ks[1], d_model, d_rnn, dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, d_rnn),
+                                     jnp.float32) * 0.02).astype(dtype),
+        "w_gate_a": dense_init(ks[3], d_rnn, d_rnn, dtype),
+        "w_gate_x": dense_init(ks[4], d_rnn, d_rnn, dtype),
+        "lambda_p": jnp.linspace(4.0, 9.0, d_rnn, dtype=jnp.float32),
+        "w_out": dense_init(ks[5], d_rnn, d_model, dtype),
+    }
+    specs = {"w_x": P("data", "model"), "w_y": P("data", "model"),
+             "conv_w": P(None, "model"),
+             "w_gate_a": P("data", "model"), "w_gate_x": P("data", "model"),
+             "lambda_p": P("model"), "w_out": P("model", "data")}
+    return params, specs
+
+
+def _rglru_core(params, u, h0=None):
+    """u: (B, S, R) pre-activation; returns (y, h_last)."""
+    B, S, R = u.shape
+    r = jax.nn.sigmoid((u @ params["w_gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_gate_x"]).astype(jnp.float32))
+    c = 8.0
+    log_a = -c * r * jax.nn.softplus(params["lambda_p"])       # (B,S,R)
+    a = jnp.exp(log_a)
+    gated_x = u.astype(jnp.float32) * i * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, R), jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, gated_x), axis=1)
+    h = aa * h0[:, None, :] + bb
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rglru_apply(params, x, state=None):
+    """x: (B,S,D).  state: (conv_tail (B,W-1,R), h (B,R)) for decode."""
+    u = x @ params["w_x"]
+    gate_y = jax.nn.gelu(x @ params["w_y"], approximate=True)
+    W = params["conv_w"].shape[0]
+    if state is None:
+        conv_tail = jnp.zeros((x.shape[0], W - 1, u.shape[-1]), u.dtype)
+        h0 = None
+    else:
+        conv_tail, h_prev = state
+        h0 = h_prev
+    upad = jnp.concatenate([conv_tail, u], axis=1)
+    # short depthwise causal conv
+    uc = sum(upad[:, i:i + u.shape[1]] * params["conv_w"][i]
+             for i in range(W))
+    y, h_last = _rglru_core(params, uc, h0)
+    out = (y * gate_y) @ params["w_out"]
+    new_tail = upad[:, -(W - 1):] if W > 1 else conv_tail
+    return out, (new_tail, h_last)
+
+
+def rglru_state_init(batch, d_rnn, conv_width=4, dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+            jnp.zeros((batch, d_rnn), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks — mLSTM (matrix memory, chunked linear-attention form) and
+# sLSTM (scalar memory, sequential scan).
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model, n_heads, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d_inner = 2 * d_model
+    params = {
+        "w_up": dense_init(ks[0], d_model, d_inner, dtype),
+        "w_q": dense_init(ks[1], d_model, d_model, dtype),
+        "w_k": dense_init(ks[2], d_model, d_model, dtype),
+        "w_v": dense_init(ks[3], d_model, d_inner, dtype),
+        "w_if": dense_init(ks[4], d_model, 2 * n_heads, jnp.float32),
+        "w_down": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+    specs = {"w_up": P("data", "model"), "w_q": P("data", "model"),
+             "w_k": P("data", "model"), "w_v": P("data", "model"),
+             "w_if": P("data", None), "w_down": P("model", "data")}
+    return params, specs
+
+
+def mlstm_apply(params, x, n_heads: int, state=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: within-chunk quadratic + cross-chunk
+    recurrent matrix state (C, n) per head — the TPU-friendly formulation.
+    q/k are d_model-wide, v/output d_inner-wide (xLSTM block shape)."""
+    B, S, D = x.shape
+    u = x @ params["w_up"]
+    di = u.shape[-1]
+    H = n_heads
+    hd = D // H          # q/k head dim
+    hv = di // H         # v head dim
+    q = (x @ params["w_q"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    k = (x @ params["w_k"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (x @ params["w_v"]).reshape(B, S, H, hv)
+    gates = (x.astype(jnp.float32) @ params["w_if"]).reshape(B, S, H, 2)
+    log_f = -jax.nn.softplus(-gates[..., 0])     # forget gate in log space
+    log_i = gates[..., 1]                        # input gate (exp gating)
+
+    if S % chunk != 0:
+        chunk = S  # decode / small sequences
+    nC = S // chunk
+    qc = q.reshape(B, nC, chunk, H, hd)
+    kc = k.reshape(B, nC, chunk, H, hd)
+    vc = v.reshape(B, nC, chunk, H, hv)
+    lf = log_f.reshape(B, nC, chunk, H)
+    li = log_i.reshape(B, nC, chunk, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hv), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        C0, n0 = state
+
+    def step(carry, blk):
+        C, n = carry
+        qb, kb, vb, lfb, lib = blk          # (B, chunk, H, ...)
+        cs_f = jnp.cumsum(lfb, axis=1)      # (B, c, H)
+        total_f = cs_f[:, -1]
+        # decay from chunk start to position t (inclusive of gates)
+        dec_in = jnp.exp(cs_f)[..., None]
+        # intra-chunk attention with relative decay
+        g = cs_f[:, :, None, :] - cs_f[:, None, :, :] + lib[:, None, :, :]
+        mask = jnp.tril(jnp.ones((qb.shape[1], qb.shape[1]), bool))
+        g = jnp.where(mask[None, :, :, None], g, -jnp.inf)
+        w = jnp.exp(jnp.minimum(g, 0.0))    # stabilized
+        scores = jnp.einsum("bthd,bshd->btsh", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32))
+        intra = jnp.einsum("btsh,bshd->bthd", scores * w,
+                           vb.astype(jnp.float32))
+        nor_i = jnp.einsum("btsh,bsh->bth", scores * w,
+                           jnp.ones(kb.shape[:3]))
+        # inter-chunk from carried state
+        inter = jnp.einsum("bthd,bhde->bthe", qb.astype(jnp.float32) * dec_in,
+                           C)
+        nor_c = jnp.einsum("bthd,bhd->bth", qb.astype(jnp.float32) * dec_in, n)
+        nor = jnp.maximum(jnp.abs(nor_i + nor_c), 1.0)
+        out = (intra + inter) / nor[..., None]
+        # update carried state
+        dec_out = jnp.exp(total_f[:, None, :] - cs_f + lib)  # (B,c,H)
+        kv = jnp.einsum("bshd,bsh,bshe->bhde", kb.astype(jnp.float32),
+                        dec_out, vb.astype(jnp.float32))
+        ksum = jnp.einsum("bshd,bsh->bhd", kb.astype(jnp.float32), dec_out)
+        C = C * jnp.exp(total_f)[..., None, None] + kv
+        n = n * jnp.exp(total_f)[..., None] + ksum
+        return (C, n), out
+
+    blks = (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+            lf.swapaxes(0, 1), li.swapaxes(0, 1))
+    (Cf, nf), outs = jax.lax.scan(step, (C0, n0), blks)
+    y = outs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(u)
+    return y @ params["w_down"], (Cf, nf)
+
+
+def mlstm_state_init(batch, d_model, n_heads):
+    hd = d_model // n_heads        # q/k head dim
+    hv = 2 * d_model // n_heads    # v head dim
+    return (jnp.zeros((batch, n_heads, hd, hv), jnp.float32),
+            jnp.zeros((batch, n_heads, hd), jnp.float32))
+
+
+def slstm_init(key, d_model, n_heads, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    params = {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        "r_in": dense_init(ks[1], d_model, 4 * d_model, dtype),
+        "w_down": dense_init(ks[2], d_model, d_model, dtype),
+        "norm": jnp.zeros((d_model,), jnp.float32),
+    }
+    specs = {"w_in": P("data", "model"), "r_in": P("data", "model"),
+             "w_down": P("data", "model"), "norm": P(None)}
+    return params, specs
+
+
+def slstm_apply(params, x, state=None, unroll: int = 8):
+    """sLSTM: true sequential recurrence (scalar memories, exp gating)."""
+    B, S, D = x.shape
+    zi = x @ params["w_in"]                       # (B, S, 4D)
+    if state is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state
+
+    r_in = params["r_in"].astype(jnp.float32)
+
+    def step(carry, zt):
+        h, c, n, m = carry
+        pre = zt.astype(jnp.float32) + h @ r_in   # (B, 4D)
+        z, i, f, o = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = -jax.nn.softplus(-f)              # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i)
+        ig = jnp.exp(i - m_new)
+        fg = jnp.exp(log_f + m - m_new)
+        c = fg * c + ig * z
+        n = fg * n + ig
+        h = o * (c / jnp.maximum(n, 1.0))
+        return (h, c, n, m_new), h
+
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                        zi.swapaxes(0, 1), unroll=unroll)
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    y = rms_norm(y, params["norm"])
+    return y @ params["w_down"], (hf, cf, nf, mf)
+
+
+def slstm_state_init(batch, d_model):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z, jnp.ones_like(z), z)

@@ -1,0 +1,49 @@
+"""--arch <id> resolution: config + model functions + input builders."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, get_config, all_arch_ids
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+
+def list_archs():
+    return all_arch_ids()
+
+
+def get_model(arch: str, smoke: bool = False):
+    cfg = get_config(arch, smoke=smoke)
+    return cfg, T
+
+
+def extra_shape(cfg: ModelConfig, batch: int):
+    """Shape of the modality-frontend stub input, if any."""
+    if cfg.family == "encdec":
+        return (batch, cfg.enc_ctx, cfg.d_model)
+    if cfg.family == "vlm":
+        return (batch, cfg.n_patches, cfg.vision_dim)
+    return None
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Concrete (smoke-test) batch."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab)
+    out = {"tokens": tokens, "labels": tokens}
+    es = extra_shape(cfg, batch)
+    if es is not None:
+        out["extra"] = jax.random.normal(k2, es, jnp.float32) * 0.02
+    return out
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (SWA/hybrid/recurrent)."""
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True

@@ -1,0 +1,519 @@
+"""The unified model: decoder-only LMs, whisper-style encoder-decoder and
+llama-3.2-vision cross-attention variants, assembled per ModelConfig.
+
+Layers are STACKED along the repeating pattern period and executed with
+``jax.lax.scan`` — compile time is depth-independent (61-layer kimi-k2
+compiles as fast as a 2-layer smoke config), which is what makes the
+40-cell x 2-mesh dry-run tractable and is how a production framework keeps
+XLA programs small.
+
+Param layout: params["blocks"][k] for offset k in the pattern period, each a
+pytree stacked over n_groups = n_layers / period.
+
+API (pure functions over param pytrees):
+  init(key, cfg)                       -> (params, specs)
+  shape_init(key, cfg)                 -> (ShapeDtypeStructs, specs)
+  forward / hidden_forward             -> logits / hidden   (train, prefill)
+  loss_fn(params, cfg, batch)          -> scalar loss
+  decode_init(cfg, batch, max_len)     -> (cache, cache_specs)
+  prime_cross_kv(params, cfg, cache, extra) -> cache
+  decode_step(params, cfg, tokens, pos, cache) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# pattern periodicity
+# ---------------------------------------------------------------------------
+
+def _cross_layers(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return set(range(cfg.n_layers))          # every decoder layer
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        return set(range(cfg.cross_attn_every - 1, cfg.n_layers,
+                         cfg.cross_attn_every))
+    return set()
+
+
+def pattern_period(cfg: ModelConfig) -> int:
+    """Smallest period of (block kind, has-cross) over the layer stack."""
+    pat = cfg.pattern
+    cross = _cross_layers(cfg)
+    n = cfg.n_layers
+    for p in range(1, n + 1):
+        if n % p:
+            continue
+        if all(pat[i] == pat[i % p] and ((i in cross) == ((i % p) in cross))
+               for i in range(n)):
+            return p
+    return n
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec):
+    return jax.tree.map(lambda s: P(None, *tuple(s)), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ModelConfig, kind: str) -> L.AttnCfg:
+    local = kind == "attn_local"
+    return L.AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+        rotary_frac=cfg.rotary_frac,
+        window=cfg.window if local or (cfg.window and kind == "attn") else 0,
+        logit_softcap=cfg.attn_softcap, causal=True)
+
+
+def _norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm == "rms":
+        return jnp.zeros((d,), jnp.float32), P(None)
+    return {"w": jnp.ones((d,), jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32)}, {"w": P(None), "b": P(None)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rms":
+        return L.rms_norm(x, p)
+    return L.layer_norm(x, p["w"], p["b"])
+
+
+def _d_rnn(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * 1.5)
+
+
+def init_layer(key, cfg: ModelConfig, kind: str, cross: bool):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["norm1"], s["norm1"] = _norm_init(cfg, cfg.d_model)
+    if kind.startswith("attn"):
+        p["attn"], s["attn"] = L.attn_init(ks[0], _attn_cfg(cfg, kind),
+                                           cfg.jdtype)
+    elif kind == "rglru":
+        p["rnn"], s["rnn"] = L.rglru_init(ks[0], cfg.d_model, _d_rnn(cfg),
+                                          cfg.n_heads, dtype=cfg.jdtype)
+    elif kind == "mlstm":
+        p["rnn"], s["rnn"] = L.mlstm_init(ks[0], cfg.d_model, cfg.n_heads,
+                                          cfg.jdtype)
+    elif kind == "slstm":
+        p["rnn"], s["rnn"] = L.slstm_init(ks[0], cfg.d_model, cfg.n_heads,
+                                          cfg.jdtype)
+    if cross:
+        p["norm_x"], s["norm_x"] = _norm_init(cfg, cfg.d_model)
+        p["cross"], s["cross"] = L.attn_init(ks[1], _attn_cfg(cfg, "attn"),
+                                             cfg.jdtype)
+        p["gate_x"] = jnp.zeros((), jnp.float32)
+        s["gate_x"] = P()
+    if cfg.d_ff > 0 and kind.startswith("attn"):
+        p["norm2"], s["norm2"] = _norm_init(cfg, cfg.d_model)
+        if cfg.moe_experts:
+            p["moe"], s["moe"] = L.moe_init(ks[2], cfg.d_model, cfg.d_ff,
+                                            cfg.moe_experts, cfg.jdtype)
+        else:
+            p["mlp"], s["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                            cfg.act, cfg.jdtype)
+    return p, s
+
+
+def init(key, cfg: ModelConfig):
+    period = pattern_period(cfg)
+    n_groups = cfg.n_layers // period
+    cross_set = _cross_layers(cfg)
+    keys = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 4)
+
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"] = L.dense_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                   cfg.jdtype)
+    specs["embed"] = P("model", "data")
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(keys[1], cfg.d_model,
+                                         cfg.padded_vocab, cfg.jdtype)
+        specs["unembed"] = P("data", "model")
+    params["norm_f"], specs["norm_f"] = _norm_init(cfg, cfg.d_model)
+
+    blocks, bspecs = [], []
+    for k in range(period):
+        per_group = []
+        spec_k = None
+        for g in range(n_groups):
+            i = g * period + k
+            p, s = init_layer(keys[2 + i], cfg, cfg.pattern[k],
+                              k in cross_set)
+            per_group.append(p)
+            spec_k = s
+        blocks.append(_stack_trees(per_group))
+        bspecs.append(_stack_specs(spec_k))
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, family="lm", moe_experts=0)
+        per_group, spec_e = [], None
+        for i in range(cfg.enc_layers):
+            p, s = init_layer(keys[2 + cfg.n_layers + i], enc_cfg, "attn",
+                              cross=False)
+            per_group.append(p)
+            spec_e = s
+        params["encoder"] = _stack_trees(per_group)
+        specs["encoder"] = _stack_specs(spec_e)
+        params["enc_norm_f"], specs["enc_norm_f"] = _norm_init(cfg,
+                                                               cfg.d_model)
+    if cfg.family == "vlm":
+        params["vision_proj"] = L.dense_init(keys[-1], cfg.vision_dim,
+                                             cfg.d_model, cfg.jdtype)
+        specs["vision_proj"] = P(None, "data")
+    return params, specs
+
+
+def shape_init(key, cfg: ModelConfig):
+    """(param ShapeDtypeStructs, PartitionSpecs) — no allocation."""
+    cap = []
+
+    def f(k):
+        p, s = init(k, cfg)
+        cap.append(s)
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, cap[0]
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _layer_forward(p, cfg: ModelConfig, kind: str, x, positions,
+                   memory, use_flash=True):
+    aux = 0.0
+    h = _apply_norm(cfg, p["norm1"], x)
+    if kind.startswith("attn"):
+        acfg = _attn_cfg(cfg, kind)
+        out, _ = L.attn_apply(p["attn"], acfg, h, positions,
+                              use_flash=use_flash)
+    elif kind == "rglru":
+        out, _ = L.rglru_apply(p["rnn"], h)
+    elif kind == "mlstm":
+        out, _ = L.mlstm_apply(p["rnn"], h, cfg.n_heads)
+    elif kind == "slstm":
+        out, _ = L.slstm_apply(p["rnn"], h)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "cross" in p and memory is not None:
+        hx = _apply_norm(cfg, p["norm_x"], x)
+        ckv = _make_cross_kv(cfg, p, memory)
+        cout, _ = L.attn_apply(p["cross"], _attn_cfg(cfg, "attn"), hx,
+                               positions, cross_kv=ckv)
+        x = x + jnp.tanh(p["gate_x"]).astype(x.dtype) * cout
+    if "norm2" in p:
+        h2 = _apply_norm(cfg, p["norm2"], x)
+        if "moe" in p:
+            out2, aux = L.moe_apply(p["moe"], h2, cfg.moe_experts,
+                                    cfg.moe_top_k)
+        else:
+            out2 = L.mlp_apply(p["mlp"], h2, cfg.act)
+        x = x + out2
+    return x, aux
+
+
+def _make_cross_kv(cfg: ModelConfig, p_layer, memory):
+    B, T, _ = memory.shape
+    k = (memory @ p_layer["cross"]["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = (memory @ p_layer["cross"]["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def _encode(params, cfg: ModelConfig, enc_input):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    x = enc_input.astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    acfg = L.AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                     n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                     causal=False, use_rope=False)
+
+    def body(x, p):
+        h = _apply_norm(cfg, p["norm1"], x)
+        out, _ = L.attn_apply(p["attn"], acfg, h, positions, use_flash=False)
+        x = x + out
+        h2 = _apply_norm(cfg, p["norm2"], x)
+        x = x + L.mlp_apply(p["mlp"], h2, cfg.act)
+        return x, 0.0
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return _apply_norm(cfg, params["enc_norm_f"], x)
+
+
+def _memory(params, cfg: ModelConfig, extra):
+    if cfg.family == "encdec":
+        return _encode(params, cfg, extra)
+    if cfg.family == "vlm":
+        return extra.astype(cfg.jdtype) @ params["vision_proj"]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+#: sequence-parallelism switch (perf iteration #1, EXPERIMENTS.md §Perf):
+#: when set to a PartitionSpec like P("data", "model", None), the residual
+#: stream between blocks is constrained to be sequence-sharded over the TP
+#: axis, converting the two per-layer TP activation all-reduces into
+#: reduce-scatter + all-gather pairs (half the collective bytes) and storing
+#: activations sharded.  Set via set_activation_sharding().
+ACTIVATION_SPEC: Optional[P] = None
+
+
+def set_activation_sharding(spec: Optional[P]):
+    global ACTIVATION_SPEC
+    ACTIVATION_SPEC = spec
+
+
+#: perf iteration #6 (REFUTED, see EXPERIMENTS.md §Perf): gathering the
+#: unembed weight over the FSDP axis traded 2.1 GB of fp32 logit all-reduce
+#: for 5.9 GB of weight all-gather under XLA's chosen schedule — off by
+#: default, kept for the measurement.
+ACTIVATION_AWARE_LOSS = False
+
+
+def _constrain(x):
+    if ACTIVATION_SPEC is not None and x.ndim == 3 and x.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(x, ACTIVATION_SPEC)
+    return x
+
+
+def hidden_forward(params, cfg: ModelConfig, tokens, extra=None,
+                   use_flash: bool = True):
+    """Embed -> scan(layer groups) -> final norm.  Returns (hidden, aux)."""
+    B, S = tokens.shape
+    period = pattern_period(cfg)
+    x = params["embed"][tokens] * (math.sqrt(cfg.d_model)
+                                   if cfg.norm == "rms" else 1.0)
+    x = x.astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    memory = _memory(params, cfg, extra)
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for k in range(period):
+            x = _constrain(x)
+            x, a = _layer_forward(gp[k], cfg, cfg.pattern[k], x, positions,
+                                  memory, use_flash)
+            aux = aux + a
+        return (_constrain(x), aux), None
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), tuple(params["blocks"]))
+    return _apply_norm(cfg, params["norm_f"], x), aux
+
+
+def forward(params, cfg: ModelConfig, tokens, extra=None,
+            use_flash: bool = True):
+    x, aux = hidden_forward(params, cfg, tokens, extra, use_flash)
+    unembed = params.get("unembed")
+    logits = x @ (unembed if unembed is not None else params["embed"].T)
+    if cfg.final_softcap > 0:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, use_flash: bool = True,
+            seq_chunk: int = 2048):
+    """Next-token loss.  For large S x vocab the unembed+softmax is chunked
+    over the sequence so the fp32 logits never materialize in full."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    extra = batch.get("extra")
+    B, S = tokens.shape
+    x, aux = hidden_forward(params, cfg, tokens, extra, use_flash)
+    unembed = params.get("unembed")
+    W = unembed if unembed is not None else params["embed"].T
+
+    def chunk_loss(x_c, labels_c):
+        # gather the unembed shard over the FSDP axis once per chunk (bf16,
+        # vocab stays model-sharded) instead of letting SPMD partial-sum the
+        # d-contraction and all-reduce fp32 logits (perf iteration #6)
+        Wg = jax.lax.with_sharding_constraint(W, P(None, "model")) \
+            if ACTIVATION_AWARE_LOSS else W
+        logits = x_c @ Wg
+        if cfg.final_softcap > 0:
+            logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        logits = logits.astype(jnp.float32)
+        # label logit via one-hot contraction rather than take_along_axis:
+        # over the model-sharded vocab axis this lowers to a local masked
+        # reduction + a tiny (B,S) all-reduce instead of an all-reduce of the
+        # full fp32 logits (perf iteration #5, EXPERIMENTS.md §Perf)
+        lbl = jnp.maximum(labels_c, 0)
+        onehot = jax.nn.one_hot(lbl, logits.shape[-1], dtype=logits.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = label_logit - lse
+        mask = (labels_c >= 0).astype(jnp.float32)
+        return -(ll * mask).sum(), mask.sum()
+
+    if S > seq_chunk and S % seq_chunk == 0:
+        n = S // seq_chunk
+        xc = x.reshape(B, n, seq_chunk, -1).swapaxes(0, 1)
+        lc = labels.reshape(B, n, seq_chunk).swapaxes(0, 1)
+
+        def body(carry, inp):
+            tot, cnt = carry
+            t, c = chunk_loss(*inp)
+            return (tot + t, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (xc, lc))
+    else:
+        tot, cnt = chunk_loss(x, labels)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _entry_init(cfg: ModelConfig, kind: str, has_cross: bool, batch: int,
+                max_len: int):
+    entry, espec = {}, {}
+    if kind.startswith("attn"):
+        acfg = _attn_cfg(cfg, kind)
+        eff = min(max_len, cfg.window) if acfg.window else max_len
+        entry["kv"] = L.kv_cache_init(acfg, batch, eff, cfg.jdtype)
+        espec["kv"] = L.kv_cache_specs()
+    elif kind == "rglru":
+        entry["state"] = L.rglru_state_init(batch, _d_rnn(cfg),
+                                            dtype=cfg.jdtype)
+        espec["state"] = (P("data", None, "model"), P("data", "model"))
+    elif kind == "mlstm":
+        # matrix memory (B, H, hd, hd): H is small (4), so shard the first
+        # memory dim over "model" instead of the head dim
+        entry["state"] = L.mlstm_state_init(batch, cfg.d_model, cfg.n_heads)
+        espec["state"] = (P("data", None, "model", None),
+                          P("data", None, "model"))
+    elif kind == "slstm":
+        entry["state"] = L.slstm_state_init(batch, cfg.d_model)
+        espec["state"] = tuple([P("data", "model")] * 4)
+    if has_cross:
+        shape = (batch, cfg.enc_ctx if cfg.family == "encdec"
+                 else cfg.n_patches, cfg.n_kv_heads, cfg.hd)
+        entry["cross_kv"] = (jnp.zeros(shape, cfg.jdtype),
+                             jnp.zeros(shape, cfg.jdtype))
+        espec["cross_kv"] = (P("data", None, None, None),
+                             P("data", None, None, None))
+    return entry, espec
+
+
+def decode_init(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree stacked per pattern offset: cache[k] has leading
+    n_groups dim.  Returns (cache, PartitionSpecs)."""
+    period = pattern_period(cfg)
+    n_groups = cfg.n_layers // period
+    cross_set = _cross_layers(cfg)
+    cache, specs = [], []
+    for k in range(period):
+        entry, espec = _entry_init(cfg, cfg.pattern[k], k in cross_set,
+                                   batch, max_len)
+        cache.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), entry))
+        specs.append(_stack_specs(espec))
+    return cache, specs
+
+
+def prime_cross_kv(params, cfg: ModelConfig, cache, extra):
+    """Fill cross-attention K/V into the decode cache (prefill-time)."""
+    memory = _memory(params, cfg, extra)
+    if memory is None:
+        return cache
+    period = pattern_period(cfg)
+    cross_set = _cross_layers(cfg)
+    for k in range(period):
+        if k not in cross_set:
+            continue
+        gp = params["blocks"][k]
+
+        def per_group(p):
+            return _make_cross_kv(cfg, p, memory)
+        kv = jax.vmap(per_group, in_axes=0)(gp)   # (n_groups, B, T, KV, D)
+        cache[k] = dict(cache[k])
+        cache[k]["cross_kv"] = kv
+    return cache
+
+
+def _layer_decode(p, cfg: ModelConfig, kind: str, x, positions, entry):
+    entry = dict(entry)
+    h = _apply_norm(cfg, p["norm1"], x)
+    if kind.startswith("attn"):
+        acfg = _attn_cfg(cfg, kind)
+        out, entry["kv"] = L.attn_apply(p["attn"], acfg, h, positions,
+                                        kv_cache=entry["kv"])
+    elif kind == "rglru":
+        out, entry["state"] = L.rglru_apply(p["rnn"], h, entry["state"])
+    elif kind == "mlstm":
+        out, entry["state"] = L.mlstm_apply(p["rnn"], h, cfg.n_heads,
+                                            entry["state"])
+    elif kind == "slstm":
+        out, entry["state"] = L.slstm_apply(p["rnn"], h, entry["state"])
+    x = x + out
+    if "cross" in p and "cross_kv" in entry:
+        hx = _apply_norm(cfg, p["norm_x"], x)
+        cout, _ = L.attn_apply(p["cross"], _attn_cfg(cfg, "attn"), hx,
+                               positions, cross_kv=entry["cross_kv"])
+        x = x + jnp.tanh(p["gate_x"]).astype(x.dtype) * cout
+    if "norm2" in p:
+        h2 = _apply_norm(cfg, p["norm2"], x)
+        if "moe" in p:
+            out2, _ = L.moe_apply(p["moe"], h2, cfg.moe_experts,
+                                  cfg.moe_top_k)
+        else:
+            out2 = L.mlp_apply(p["mlp"], h2, cfg.act)
+        x = x + out2
+    return x, entry
+
+
+def decode_step(params, cfg: ModelConfig, tokens, position, cache):
+    """tokens: (B, 1); position: scalar index.  Returns (logits, cache)."""
+    B, S = tokens.shape
+    period = pattern_period(cfg)
+    x = params["embed"][tokens] * (math.sqrt(cfg.d_model)
+                                   if cfg.norm == "rms" else 1.0)
+    x = x.astype(cfg.jdtype)
+    positions = jnp.broadcast_to(position[None], (B, S)) \
+        if jnp.ndim(position) == 0 else position
+
+    def group_body(x, scans):
+        new_entries = []
+        for k in range(period):
+            p, entry = scans[k]
+            x, ne = _layer_decode(p, cfg, cfg.pattern[k], x, positions, entry)
+            new_entries.append(ne)
+        return x, tuple(new_entries)
+
+    scans = tuple((params["blocks"][k], cache[k]) for k in range(period))
+    x, new_cache = jax.lax.scan(group_body, x, scans)
+    x = _apply_norm(cfg, params["norm_f"], x)
+    unembed = params.get("unembed")
+    logits = x @ (unembed if unembed is not None else params["embed"].T)
+    if cfg.final_softcap > 0:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, list(new_cache)

@@ -1,0 +1,3 @@
+from .step import build_prefill_step, build_serve_step
+
+__all__ = ["build_prefill_step", "build_serve_step"]

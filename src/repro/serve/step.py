@@ -1,0 +1,43 @@
+"""serve-side step builders.
+
+* prefill_step: full-sequence forward, returns last-position logits (the
+  full-vocab logits tensor for 32k x 256k would be ~0.5 TB — never built).
+* serve_step: one decode step against the KV cache (the shape grid's
+  ``decode_32k`` / ``long_500k`` cells lower THIS, not train_step).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def build_prefill_step(cfg: ModelConfig, use_flash: bool = True) -> Callable:
+    def prefill_step(params, batch):
+        x, _ = T.hidden_forward(params, cfg, batch["tokens"],
+                                batch.get("extra"), use_flash)
+        last = x[:, -1:]
+        unembed = params.get("unembed")
+        W = unembed if unembed is not None else params["embed"].T
+        logits = last @ W
+        if cfg.final_softcap > 0:
+            from repro.models import layers as L
+            logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        return logits
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, tokens (B,1), position scalar, cache) ->
+    (next_tokens (B,1), logits, cache)."""
+    def serve_step(params, tokens, position, cache):
+        logits, cache = T.decode_step(params, cfg, tokens, position, cache)
+        nxt = logits[:, -1:].argmax(-1).astype(jnp.int32)
+        return nxt, logits, cache
+    return serve_step

@@ -1,0 +1,3 @@
+from .step import TrainState, build_train_step, auto_microbatches
+
+__all__ = ["TrainState", "build_train_step", "auto_microbatches"]

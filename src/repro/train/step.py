@@ -1,0 +1,99 @@
+"""train_step builder: grad accumulation (scan over microbatches), global-norm
+clipping, optimizer update.  Everything is a pure function of (state, batch),
+jit/pjit-friendly; sharding comes from in_shardings/out_shardings at the
+launcher level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def auto_microbatches(cfg: ModelConfig, global_batch: int, seq: int,
+                      dp: int) -> int:
+    """Pick a microbatch count: bound per-microbatch tokens to ~128k while
+    keeping micro_batch divisible by dp."""
+    if cfg.microbatch:
+        return cfg.microbatch
+    target_tokens = 131072
+    n = max(1, (global_batch * seq) // target_tokens)
+    # n must divide global_batch and keep global_batch//n divisible by dp
+    while n > 1 and (global_batch % n or (global_batch // n) % dp):
+        n -= 1
+    return max(1, n)
+
+
+def make_state(key, cfg: ModelConfig, optimizer):
+    params, specs = T.init(key, cfg)
+    opt_state = optimizer.init(params)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32)), specs
+
+
+def state_specs(cfg: ModelConfig, optimizer, param_specs):
+    from jax.sharding import PartitionSpec as P
+    return TrainState(param_specs, optimizer.state_specs(param_specs), P())
+
+
+def build_train_step(cfg: ModelConfig, optimizer, n_micro: int = 1,
+                     max_grad_norm: float = 1.0,
+                     use_flash: bool = True) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B, S), "labels": (B, S), ["extra": (B, ...)]}
+    Gradients accumulate over ``n_micro`` scan steps (compute/comm overlap:
+    the FSDP all-gathers of microbatch i+1 overlap the backward of i under
+    XLA's latency-hiding scheduler).
+    """
+    loss = partial(T.loss_fn, cfg=cfg, use_flash=use_flash)
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        params = state.params
+
+        def micro_loss(p, mb):
+            return loss(p, batch=mb)
+
+        grad_fn = jax.value_and_grad(micro_loss)
+
+        if n_micro == 1:
+            l, grads = grad_fn(params, batch)
+        else:
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc, ltot = carry
+                l, g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, ltot + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            l = lsum / n_micro
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(grads, state.opt_state, params)
+        metrics = {"loss": l.astype(jnp.float32), "grad_norm": gnorm,
+                   "step": state.step + 1}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,80 @@
+"""Random-forest surrogate + SMAC optimizer unit/property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bo.rf import RandomForest
+from repro.core.bo.smac import SMACOptimizer, expected_improvement
+from repro.core.knobs import HEMEM_SPACE, Knob, KnobSpace
+
+
+def test_rf_fits_simple_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(200, 4))
+    y = 3 * X[:, 0] + np.sin(6 * X[:, 1]) + 0.05 * rng.normal(size=200)
+    rf = RandomForest(seed=1).fit(X, y)
+    Xt = rng.uniform(size=(100, 4))
+    yt = 3 * Xt[:, 0] + np.sin(6 * Xt[:, 1])
+    pred, std = rf.predict(Xt)
+    rmse = float(np.sqrt(np.mean((pred - yt) ** 2)))
+    assert rmse < 0.5, rmse
+    assert (std >= 0).all()
+
+
+def test_rf_bootstrap_disagreement_gives_positive_std():
+    """Across-tree spread (the EI uncertainty source) is non-degenerate on
+    noisy data and shrinks as the target gets cleaner."""
+    rng = np.random.default_rng(1)
+    X = rng.uniform(size=(150, 3))
+    y_noisy = X[:, 0] + rng.normal(0, 0.5, size=150)
+    y_clean = X[:, 0] + rng.normal(0, 0.01, size=150)
+    Xt = rng.uniform(size=(64, 3))
+    _, std_noisy = RandomForest(seed=2).fit(X, y_noisy).predict(Xt)
+    _, std_clean = RandomForest(seed=2).fit(X, y_clean).predict(Xt)
+    assert std_noisy.mean() > 0
+    assert std_noisy.mean() > std_clean.mean()
+
+
+def test_expected_improvement_properties():
+    mean = np.array([1.0, 1.0, 0.5])
+    std = np.array([0.1, 1.0, 0.1])
+    ei = expected_improvement(mean, std, best=1.0)
+    assert ei[1] > ei[0]           # more uncertainty -> more EI at same mean
+    assert ei[2] > ei[0]           # better mean -> more EI
+    assert (ei >= 0).all()
+
+
+def test_smac_minimizes_synthetic_knob_function():
+    space = KnobSpace([
+        Knob("a", 10, 1, 100, is_int=True),
+        Knob("b", 500, 10, 5000, is_int=True, log=True),
+        Knob("c", 5, 1, 10, is_int=True),
+    ])
+
+    def f(cfg):
+        # optimum near a=70, b=100, c irrelevant
+        return ((cfg["a"] - 70) / 100) ** 2 + \
+            (np.log(cfg["b"] / 100)) ** 2 * 0.1
+    opt = SMACOptimizer(space, seed=3, n_init=8)
+    best = opt.minimize(f, budget=40)
+    assert f(space.default_config()) > best.value
+    assert abs(best.config["a"] - 70) < 25
+
+
+def test_smac_starts_with_default():
+    opt = SMACOptimizer(HEMEM_SPACE, seed=0)
+    first = opt.ask()
+    assert first == HEMEM_SPACE.default_config()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_property_ask_always_in_domain(seed):
+    opt = SMACOptimizer(HEMEM_SPACE, seed=seed, n_init=3, n_candidates=32)
+    rng = np.random.default_rng(seed)
+    for i in range(8):
+        cfg = opt.ask()
+        for k in HEMEM_SPACE:
+            assert k.lo <= cfg[k.name] <= k.hi
+        opt.tell(cfg, float(rng.uniform(10, 100)))

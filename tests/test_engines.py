@@ -1,0 +1,120 @@
+"""Unit + property tests for tiering engines and page-state invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import (HeMemEngine, HMSDKEngine, MemtisEngine,
+                               OracleEngine, make_engine)
+from repro.core.knobs import HEMEM_SPACE, HMSDK_SPACE, MEMTIS_SPACE
+from repro.core.pages import MigrationPlan, TierState
+
+
+def _mk(n=256, cap=32, engine="hemem", **kv):
+    tier = TierState(n, cap)
+    space = {"hemem": HEMEM_SPACE, "hmsdk": HMSDK_SPACE,
+             "memtis": MEMTIS_SPACE}[engine]
+    cfg = space.validate(kv)
+    return tier, make_engine(engine, cfg, tier, seed=0)
+
+
+def test_tierstate_invariants_enforced():
+    tier = TierState(16, 4)
+    tier.allocate_first_touch(np.ones(16, bool))
+    assert tier.fast_used == 4
+    with pytest.raises(AssertionError):
+        tier.apply(MigrationPlan(promote=np.array([0]),
+                                 demote=np.zeros(0, np.int64)))  # already fast
+
+
+def test_hemem_promotes_hot_pages():
+    tier, eng = _mk()
+    tier.allocate_first_touch(np.ones(256, bool))
+    reads = np.zeros(256)
+    reads[200:210] = 1e6          # very hot, slow-tier pages
+    for _ in range(5):
+        eng.observe(reads, np.zeros(256), 500.0)
+        plan = eng.plan(500.0, 10000)
+        tier.apply(plan)
+    assert tier.in_fast[200:210].sum() >= 8
+
+
+def test_hemem_cooling_halves_counts():
+    tier, eng = _mk(cooling_pages=65536)   # sync full sweeps
+    tier.allocate_first_touch(np.ones(256, bool))
+    reads = np.zeros(256)
+    reads[0] = 1e9                # drives the sample counter over trigger
+    eng.observe(reads, np.zeros(256), 500.0)
+    assert eng.cooling_events > 0
+
+
+def test_hemem_rate_limit_respected():
+    tier, eng = _mk(n=4096, cap=2048)
+    tier.allocate_first_touch(np.ones(4096, bool))
+    reads = np.zeros(4096)
+    reads[2048:] = 1e6
+    eng.observe(reads, np.zeros(4096), 500.0)
+    plan = eng.plan(500.0, max_pages_this_epoch=7)
+    assert plan.n_pages <= 14     # promote<=7 bounded + matching demotes
+
+
+def test_oracle_fills_capacity_with_hottest():
+    tier = TierState(64, 8)
+    tier.allocate_first_touch(np.ones(64, bool))
+    eng = OracleEngine({}, tier)
+    heat = np.arange(64, dtype=float)
+    eng.observe(heat, np.zeros(64), 500.0)
+    tier.apply(eng.plan(500.0, 10 ** 6))
+    assert set(np.flatnonzero(tier.in_fast)) == set(range(56, 64))
+
+
+def test_memtis_adapts_threshold():
+    tier, eng = _mk(engine="memtis", n=256, cap=32)
+    tier.allocate_first_touch(np.ones(256, bool))
+    reads = np.zeros(256)
+    reads[:64] = 5e5
+    for _ in range(10):
+        eng.observe(reads, np.zeros(256), 500.0)
+        tier.apply(eng.plan(500.0, 10 ** 6))
+    assert eng.hot_threshold > 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(32, 512),
+    cap_frac=st.floats(0.05, 0.9),
+    seed=st.integers(0, 10),
+)
+def test_property_apply_never_violates_capacity(n, cap_frac, seed):
+    """For random access patterns and any engine, the fast tier never
+    exceeds capacity and no page is in two tiers (single in_fast bool by
+    construction; capacity asserted by TierState)."""
+    rng = np.random.default_rng(seed)
+    cap = max(1, int(n * cap_frac))
+    tier = TierState(n, cap)
+    eng = HeMemEngine(HEMEM_SPACE.default_config(), tier, seed=seed)
+    for _ in range(8):
+        touched = rng.uniform(size=n) < 0.7
+        tier.allocate_first_touch(touched)
+        reads = rng.gamma(0.3, 2e5, size=n) * touched
+        writes = rng.gamma(0.2, 5e4, size=n) * touched
+        eng.observe(reads, writes, 500.0)
+        plan = eng.plan(500.0, 10 ** 6)
+        tier.apply(plan)           # asserts invariants internally
+        assert tier.fast_used <= cap
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_property_knob_space_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    for space in (HEMEM_SPACE, HMSDK_SPACE, MEMTIS_SPACE):
+        cfg = space.sample(rng)
+        enc = space.encode(cfg)
+        assert ((enc >= 0) & (enc <= 1)).all()
+        dec = space.decode(enc)
+        for k in cfg:
+            knob = space[k]
+            assert knob.lo <= dec[k] <= knob.hi
+            if not knob.log:
+                assert abs(knob.to_unit(cfg[k]) - knob.to_unit(dec[k])) < 0.02

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as fa
+from repro.kernels.paged_attention import paged_attention as pa
+from repro.kernels.page_migrate import page_migrate as pm
+
+
+def _dense_attention(q, k, v, causal, window, cap):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D).astype(np.float64) / np.sqrt(D)
+    s = np.einsum("bskgd,btkd->bskgt", qg, k.astype(np.float64))
+    if cap > 0:
+        s = cap * np.tanh(s / cap)
+    qp = np.arange(S)[:, None]
+    kp = np.arange(k.shape[1])[None, :]
+    mask = np.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = np.where(mask[None, :, None, None], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = np.where(mask[None, :, None, None], p, 0.0)
+    out = np.einsum("bskgt,btkd->bskgd", p / p.sum(-1, keepdims=True),
+                    v.astype(np.float64))
+    return out.reshape(B, S, H, D)
+
+
+SWEEP = [
+    # B, S, H, KV, D, causal, window, cap, dtype
+    (1, 128, 4, 4, 64, True, 0, 0.0, jnp.float32),
+    (2, 256, 8, 2, 64, True, 0, 0.0, jnp.float32),
+    (1, 256, 4, 1, 128, True, 128, 0.0, jnp.float32),
+    (2, 128, 4, 4, 64, False, 0, 0.0, jnp.float32),
+    (1, 256, 2, 2, 256, True, 0, 50.0, jnp.float32),
+    (1, 128, 4, 4, 64, True, 0, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,D,causal,window,cap,dtype", SWEEP)
+def test_flash_attention_vs_oracle(B, S, H, KV, D, causal, window, cap,
+                                   dtype):
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), dtype)
+    out_pallas = fa(q, k, v, causal=causal, window=window, logit_softcap=cap,
+                    interpret=True)
+    out_ref = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                      logit_softcap=cap)
+    out_dense = _dense_attention(np.asarray(q, np.float64),
+                                 np.asarray(k, np.float64),
+                                 np.asarray(v, np.float64),
+                                 causal, window, cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_pallas, np.float64), out_dense,
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(out_ref, np.float64), out_dense,
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,KV,D,page,ppseq,P", [
+    (2, 8, 4, 64, 16, 4, 16),
+    (3, 4, 1, 128, 8, 8, 64),
+    (1, 16, 8, 64, 32, 2, 8),
+])
+def test_paged_attention_vs_oracle(B, H, KV, D, page, ppseq, P):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    table = jnp.asarray(
+        np.stack([rng.choice(P, ppseq, replace=False) for _ in range(B)]),
+        jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, page * ppseq + 1, B), jnp.int32)
+    out_p = pa(q, kp, vp, table, lengths, interpret=True)
+    out_r = ref.paged_attention_ref(q, kp, vp, table, lengths)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_ignores_unused_pages():
+    """Pages past `lengths` must not affect the result."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 4, 32)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(8, 8, 2, 32)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(8, 8, 2, 32)), jnp.float32)
+    table = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    out_a = pa(q, kp, vp, table, jnp.asarray([9], jnp.int32), interpret=True)
+    kp2 = kp.at[2:].set(999.0)
+    vp2 = vp.at[2:].set(-999.0)
+    out_b = pa(q, kp2, vp2, table, jnp.asarray([9], jnp.int32),
+               interpret=True)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("P,elems,n", [(8, 64, 4), (16, 256, 16), (4, 32, 1)])
+def test_page_migrate_vs_oracle(P, elems, n):
+    rng = np.random.default_rng(11)
+    dst = jnp.asarray(rng.normal(size=(P, elems)), jnp.float32)
+    src = jnp.asarray(rng.normal(size=(P, elems)), jnp.float32)
+    d_ids = jnp.asarray(rng.choice(P, n, replace=False), jnp.int32)
+    s_ids = jnp.asarray(rng.choice(P, n, replace=False), jnp.int32)
+    # sprinkle no-ops
+    if n > 2:
+        d_ids = d_ids.at[0].set(-1)
+        s_ids = s_ids.at[1].set(-1)
+    out_p = pm(dst.copy(), src, d_ids, s_ids, interpret=True)
+    out_r = ref.page_migrate_ref(dst, src, d_ids, s_ids)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r))
+
+
+def test_hotness_update_ref():
+    counts = jnp.zeros(16)
+    ids = jnp.asarray([3, 3, 5, -1, 3], jnp.int32)
+    new, hot = ref.hotness_update_ref(counts, ids, cool=False,
+                                      hot_threshold=2.0)
+    assert new[3] == 3 and new[5] == 1
+    assert bool(hot[3]) and not bool(hot[5])
+    cooled, _ = ref.hotness_update_ref(new, jnp.asarray([-1], jnp.int32),
+                                       cool=True, hot_threshold=2.0)
+    assert cooled[3] == 1.5

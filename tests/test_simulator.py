@@ -1,0 +1,61 @@
+"""Simulator property tests: scale invariance, machine ordering, ratios."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knobs import HEMEM_SPACE
+from repro.core.simulator import (MACHINES, NUMA, PMEM_LARGE, PMEM_SMALL,
+                                  run_simulation, scale_config)
+from repro.core.workloads import make_workload
+
+
+def test_scale_invariance_of_speedup_ratios():
+    """The default/tuned ratio should be roughly preserved across sim
+    scales (the whole point of the scaled evaluation)."""
+    tuned = HEMEM_SPACE.validate(dict(read_hot_threshold=30,
+                                      write_hot_threshold=30))
+    ratios = []
+    for scale in (0.2, 0.35):
+        wl = make_workload("gapbs-pr", "kron", threads=12, scale=scale)
+        d = run_simulation(wl, "hemem", None, PMEM_LARGE, seed=0).total_s
+        t = run_simulation(wl, "hemem", tuned, PMEM_LARGE, seed=0).total_s
+        ratios.append(d / t)
+    assert abs(ratios[0] - ratios[1]) / ratios[0] < 0.25, ratios
+
+
+def test_numa_faster_than_pmem_for_slow_tier_bound_workloads():
+    wl = make_workload("gups", "8GiB-hot", threads=12, scale=0.25)
+    t_pmem = run_simulation(wl, "static", {}, PMEM_LARGE, seed=0).total_s
+    t_numa = run_simulation(wl, "static", {}, NUMA, seed=0).total_s
+    assert t_numa < t_pmem   # NUMA's far tier is ~5x faster
+
+
+def test_bigger_fast_tier_never_hurts_oracle():
+    wl = make_workload("silo", "ycsb-c", threads=12, scale=0.25)
+    t_small = run_simulation(wl, "oracle", {}, PMEM_LARGE,
+                             fast_slow_ratio=16.0, seed=0).total_s
+    t_big = run_simulation(wl, "oracle", {}, PMEM_LARGE,
+                           fast_slow_ratio=1.0, seed=0).total_s
+    assert t_big <= t_small * 1.01
+
+
+def test_scale_config_scales_page_semantics_only():
+    cfg = HEMEM_SPACE.default_config()
+    scaled = scale_config("hemem", cfg, 0.25)
+    assert scaled["cooling_pages"] == int(cfg["cooling_pages"] * 0.25)
+    assert scaled["read_hot_threshold"] == cfg["read_hot_threshold"]
+    assert scaled["migration_period"] == cfg["migration_period"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 20),
+       wname=st.sampled_from(["gups", "silo", "xsbench", "graph500"]))
+def test_property_simulation_outputs_sane(seed, wname):
+    inp = {"gups": "8GiB-hot", "silo": "ycsb-c"}.get(wname, "")
+    wl = make_workload(wname, inp, threads=12, scale=0.2, seed=seed)
+    r = run_simulation(wl, "hemem", None, PMEM_LARGE, seed=seed)
+    assert np.isfinite(r.total_s) and r.total_s > 0
+    assert (r.epoch_wall_ms > 0).all()
+    assert (np.diff(r.cum_migrations) >= 0).all()
+    assert ((r.fast_hit_rate >= 0) & (r.fast_hit_rate <= 1)).all()

@@ -1,0 +1,26 @@
+"""Calibration harness: default vs random-search best per workload (dev tool)."""
+import sys, time
+import numpy as np
+sys.path.insert(0, "src")
+from repro.core.simulator import run_simulation, PMEM_LARGE
+from repro.core.workloads import make_workload, PAPER_SUITE
+from repro.core.knobs import HEMEM_SPACE
+
+N_RAND = int(sys.argv[1]) if len(sys.argv) > 1 else 80
+rng = np.random.default_rng(7)
+configs = [HEMEM_SPACE.default_config()] + HEMEM_SPACE.sample_batch(rng, N_RAND)
+t0 = time.time()
+print(f"{'workload':22s} {'default':>8s} {'best':>8s} {'gain':>6s} {'static':>8s} {'oracle':>8s} best-config-delta")
+for name, inp in PAPER_SUITE:
+    wl = make_workload(name, inp, threads=12, scale=0.25, seed=0)
+    times = []
+    for cfg in configs:
+        r = run_simulation(wl, "hemem", cfg, PMEM_LARGE, seed=0)
+        times.append(r.total_s)
+    times = np.array(times)
+    best_i = int(times.argmin())
+    st = run_simulation(wl, "static", {}, PMEM_LARGE, seed=0).total_s
+    orc = run_simulation(wl, "oracle", {}, PMEM_LARGE, seed=0).total_s
+    d = {k: v for k, v in configs[best_i].items() if v != configs[0][k]}
+    print(f"{wl.key:22s} {times[0]:8.1f} {times.min():8.1f} {times[0]/times.min():5.2f}x {st:8.1f} {orc:8.1f} {d}")
+print(f"[{time.time()-t0:.0f}s, {N_RAND} random configs]")
