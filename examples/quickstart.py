@@ -2,6 +2,10 @@
 pipeline, §3.1) and print the before/after table.
 
     PYTHONPATH=src python examples/quickstart.py [--workload gups] [--budget 40]
+
+Pass ``--batch-size 8`` to evaluate whole candidate batches per tuning
+iteration through the vectorized simulator (``run_simulation_batch``), and
+``--workers auto`` to additionally shard each batch over a process pool.
 """
 import argparse
 import sys, os
@@ -19,12 +23,20 @@ def main():
     ap.add_argument("--input", default="")
     ap.add_argument("--machine", default="pmem-large")
     ap.add_argument("--budget", type=int, default=40)
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="evaluate q candidates per iteration in one "
+                         "vectorized simulator pass (1 = sequential)")
+    ap.add_argument("--workers", default=1,
+                    help="process-pool size for batch sharding (int or auto)")
     args = ap.parse_args()
+    workers = args.workers if args.workers == "auto" else int(args.workers)
 
     sc = Scenario(args.workload, args.input, machine=args.machine)
-    print(f"Tuning HeMem for {sc.key} (budget {args.budget})...")
+    mode = f"batch q={args.batch_size}" if args.batch_size > 1 else "sequential"
+    print(f"Tuning HeMem for {sc.key} (budget {args.budget}, {mode})...")
     res = tune_scenario("hemem", sc, budget=args.budget, seed=0,
-                        verbose=True)
+                        verbose=True, batch_size=args.batch_size,
+                        workers=workers)
     print(f"\ndefault: {res.default_value:8.1f}s")
     print(f"best:    {res.best_value:8.1f}s   ({res.improvement:.2f}x)")
     print("\nbest config (changes vs default):")

@@ -1,4 +1,4 @@
-"""SMAC-style Bayesian optimizer (§3.1).
+"""SMAC-style Bayesian optimizer (§3.1), with batched suggestions.
 
 Sequential Model-based Algorithm Configuration [18]: random-forest surrogate
 + Expected-Improvement acquisition, with (1) an initial random design and
@@ -8,6 +8,16 @@ Sequential Model-based Algorithm Configuration [18]: random-forest surrogate
 Candidate generation follows SMAC's local-search-plus-random scheme: EI is
 maximized over Gaussian neighbours of the best-seen configurations plus a
 pool of fresh uniform samples.
+
+**Batch mode** (:meth:`SMACOptimizer.ask_batch` / ``tell_batch``) suggests q
+configurations per round so a vectorized objective
+(:func:`repro.core.simulator.run_simulation_batch`) can evaluate the whole
+candidate batch in one simulator pass.  Exploration slots (the default
+config, the initial random design and the random interleave) are filled
+exactly as the sequential schedule would; the remaining slots take the
+**top-q EI** candidates (deduplicated) from one shared candidate pool,
+scored with the vectorized random-forest descent.  At ``q=1`` the batch path
+delegates to :meth:`ask`, so histories are bit-identical to sequential runs.
 """
 
 from __future__ import annotations
@@ -71,6 +81,13 @@ class SMACOptimizer:
             Observation(self.space.validate(config), float(value)))
         self._surrogate = None  # invalidate
 
+    def tell_batch(self, configs, values) -> None:
+        """Record one batched evaluation round."""
+        if len(configs) != len(values):
+            raise ValueError("configs and values must have equal length")
+        for cfg, val in zip(configs, values):
+            self.tell(cfg, val)
+
     # -- surrogate ------------------------------------------------------------
     def surrogate(self) -> RandomForest:
         if self._surrogate is None:
@@ -94,24 +111,75 @@ class SMACOptimizer:
 
         model = self.surrogate()
         best_val = self.best.value
+        cands = self._candidate_pool(self.n_candidates)
+        X = np.stack([self.space.encode(c) for c in cands])
+        mean, std = model.predict(X)
+        ei = expected_improvement(mean, std, best_val)
+        return cands[int(np.argmax(ei))]
 
-        # candidate pool: local neighbours of the best parents + random
+    def _candidate_pool(self, n_candidates: int) -> List[Config]:
+        """Local neighbours of the best parents + fresh uniform samples."""
         parents = sorted(self.observations, key=lambda o: o.value)
         parents = parents[:self.n_local_parents]
         cands: List[Config] = []
-        per_parent = max(4, self.n_candidates // (2 * len(parents)))
+        per_parent = max(4, n_candidates // (2 * len(parents)))
         for p in parents:
             cands.extend(self.space.neighbors(p.config, self.rng,
                                               n=per_parent, scale=0.12))
             cands.extend(self.space.neighbors(p.config, self.rng,
                                               n=per_parent // 2, scale=0.35))
         cands.extend(self.space.sample_batch(
-            self.rng, max(8, self.n_candidates - len(cands))))
+            self.rng, max(8, n_candidates - len(cands))))
+        return cands
 
-        X = np.stack([self.space.encode(c) for c in cands])
-        mean, std = model.predict(X)
+    def ask_batch(self, q: int) -> List[Config]:
+        """Suggest ``q`` configs for one batched evaluation round.
+
+        Slots that the sequential schedule would spend on exploration
+        (default config, initial random design, random interleaving) stay
+        exploratory; the rest are the top-``q`` EI candidates from one
+        shared pool.  ``q=1`` delegates to :meth:`ask`, preserving
+        bit-identical sequential histories.
+        """
+        if q < 1:
+            raise ValueError("q must be >= 1")
+        if q == 1:
+            return [self.ask()]
+        out: List[Config] = []
+        n_seen = len(self.observations)
+        while len(out) < q and n_seen + len(out) < self.n_init:
+            if n_seen + len(out) == 0 and self.start_with_default:
+                out.append(self.space.default_config())
+            else:
+                out.append(self.space.sample(self.rng))
+        n_model = 0
+        for _ in range(q - len(out)):
+            if len(self.observations) < 2 or \
+                    self.rng.uniform() < self.random_prob:
+                # forced interleave — or nothing observed yet to model
+                out.append(self.space.sample(self.rng))
+            else:
+                n_model += 1
+        if n_model == 0:
+            return out
+        model = self.surrogate()
+        best_val = self.best.value
+        cands = self._candidate_pool(max(self.n_candidates, 64 * n_model))
+        X = self.space.encode_batch(cands)
+        mean, std = model.predict_batch(X)
         ei = expected_improvement(mean, std, best_val)
-        return cands[int(np.argmax(ei))]
+        seen = set()
+        for i in np.argsort(-ei, kind="stable"):
+            key = tuple(sorted(cands[i].items()))
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(cands[i])
+            if len(seen) == n_model:
+                break
+        while len(out) < q:  # pool exhausted by dedup: fall back to random
+            out.append(self.space.sample(self.rng))
+        return out
 
     # -- full loop -------------------------------------------------------------
     def minimize(self, objective: Callable[[Config], float],
@@ -140,6 +208,21 @@ class RandomSearch:
     @property
     def best(self) -> Observation:
         return min(self.observations, key=lambda o: o.value)
+
+    def ask_batch(self, q: int) -> List[Config]:
+        out = []
+        for j in range(q):
+            first = len(self.observations) + j == 0
+            out.append(self.space.default_config()
+                       if first and self.start_with_default
+                       else self.space.sample(self.rng))
+        return out
+
+    def tell_batch(self, configs, values) -> None:
+        if len(configs) != len(values):
+            raise ValueError("configs and values must have equal length")
+        for cfg, val in zip(configs, values):
+            self.observations.append(Observation(dict(cfg), float(val)))
 
     def minimize(self, objective, budget: int = 100, callback=None):
         for i in range(budget):

@@ -5,13 +5,20 @@ objective) to an optimizer and records the full history, the incumbent
 trajectory and the iterations-to-optimum statistics the paper reports
 ("SMAC finds the best-performing configuration for GUPS within 10-16
 iterations").
+
+With ``batch_size=q > 1`` and a batched objective (a callable mapping a list
+of configs to a list of values, e.g.
+``Scenario.objective_batch(engine)``), each tuning iteration asks the
+optimizer for a whole candidate batch and evaluates it in ONE vectorized
+simulator pass — the history still contains exactly ``budget`` observations,
+and ``batch_size=1`` reproduces the sequential loop bit-for-bit.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Mapping, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -56,12 +63,21 @@ class TuningSession:
     def __init__(self, engine: str, objective: Callable[[Config], float],
                  scenario_key: str = "", space: Optional[KnobSpace] = None,
                  optimizer: str = "smac", budget: int = 100, seed: int = 0,
-                 n_init: int = 20, random_prob: float = 0.20):
+                 n_init: int = 20, random_prob: float = 0.20,
+                 batch_size: int = 1,
+                 objective_batch: Optional[
+                     Callable[[Sequence[Config]], Sequence[float]]] = None):
         self.engine = engine
         self.space = space if space is not None else get_space(engine)
         self.objective = objective
+        self.objective_batch = objective_batch
         self.scenario_key = scenario_key
         self.budget = budget
+        self.batch_size = max(1, int(batch_size))
+        if self.batch_size > 1 and objective_batch is None:
+            # fall back to mapping the scalar objective over the batch
+            self.objective_batch = lambda cfgs: [float(objective(c))
+                                                 for c in cfgs]
         if optimizer == "smac":
             self.optimizer = SMACOptimizer(self.space, seed=seed,
                                            n_init=n_init,
@@ -73,7 +89,6 @@ class TuningSession:
 
     def run(self, verbose: bool = False) -> TuningResult:
         t0 = time.time()
-        default_value = float(self.objective(self.space.default_config()))
 
         def cb(i, cfg, val):
             if verbose:
@@ -81,8 +96,22 @@ class TuningSession:
                 print(f"  iter {i + 1:3d}/{self.budget}: f={val:9.2f}s "
                       f"best={best:9.2f}s", flush=True)
 
-        self.optimizer.minimize(self.objective, budget=self.budget,
-                                callback=cb)
+        if self.batch_size > 1:
+            default_value = float(
+                self.objective_batch([self.space.default_config()])[0])
+            done = 0
+            while done < self.budget:
+                q = min(self.batch_size, self.budget - done)
+                cfgs = self.optimizer.ask_batch(q)
+                vals = [float(v) for v in self.objective_batch(cfgs)]
+                self.optimizer.tell_batch(cfgs, vals)
+                for j, (cfg, val) in enumerate(zip(cfgs, vals)):
+                    cb(done + j, cfg, val)
+                done += q
+        else:
+            default_value = float(self.objective(self.space.default_config()))
+            self.optimizer.minimize(self.objective, budget=self.budget,
+                                    callback=cb)
         return TuningResult(
             engine=self.engine, scenario=self.scenario_key,
             budget=self.budget,
@@ -92,9 +121,31 @@ class TuningSession:
 
 def tune_scenario(engine: str, scenario, budget: int = 100, seed: int = 0,
                   optimizer: str = "smac", verbose: bool = False,
+                  batch_size: int = 1, workers: int = 1,
+                  sampler: str = "sparse", backend: str = "numpy",
                   ) -> TuningResult:
-    """Convenience wrapper used by benchmarks and examples."""
+    """Convenience wrapper used by benchmarks and examples.
+
+    ``batch_size=q > 1`` evaluates each optimizer round with
+    :func:`~repro.core.simulator.run_simulation_batch` (``sampler``/
+    ``workers``/``backend`` select the vectorized evaluation mode);
+    ``batch_size=1`` is the paper-faithful sequential loop.
+    """
+    if batch_size > 1:
+        objective_batch = scenario.objective_batch(
+            engine, sampler=sampler, workers=workers, backend=backend)
+    else:
+        objective_batch = None
+        if workers not in (1, None) or sampler != "sparse" \
+                or backend != "numpy":
+            import warnings
+            warnings.warn(
+                "batch_size=1 runs the paper-faithful sequential loop; "
+                "workers/sampler/backend only apply with batch_size > 1",
+                stacklevel=2)
     session = TuningSession(engine, scenario.objective(engine),
                             scenario_key=scenario.key, budget=budget,
-                            seed=seed, optimizer=optimizer)
+                            seed=seed, optimizer=optimizer,
+                            batch_size=batch_size,
+                            objective_batch=objective_batch)
     return session.run(verbose=verbose)

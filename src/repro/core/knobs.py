@@ -70,6 +70,15 @@ class KnobSpace:
         self._by_name = {k.name: k for k in self.knobs}
         if len(self._by_name) != len(self.knobs):
             raise ValueError("duplicate knob names")
+        # vectorized knob bounds for the batched encode/decode paths
+        self._lo = np.array([k.lo for k in self.knobs], dtype=np.float64)
+        self._hi = np.array([k.hi for k in self.knobs], dtype=np.float64)
+        self._log = np.array([k.log for k in self.knobs])
+        self._int = np.array([k.is_int for k in self.knobs])
+        self._lo_t = self._lo.copy()
+        self._hi_t = self._hi.copy()
+        self._lo_t[self._log] = np.log(self._lo[self._log])
+        self._hi_t[self._log] = np.log(self._hi[self._log])
 
     # -- basic access ------------------------------------------------------
     def __len__(self) -> int:
@@ -123,6 +132,37 @@ class KnobSpace:
             v = k.from_unit(float(u))
             cfg[k.name] = int(v) if k.is_int else v
         return cfg
+
+    # -- batched encoding (vectorized over configs) -------------------------
+    def encode_batch(self, configs: Sequence[Mapping[str, Any]]) -> np.ndarray:
+        """Encode N configs as an ``(N, len(self))`` unit-interval matrix."""
+        V = np.array([[float(c[k.name]) for k in self.knobs]
+                      for c in configs], dtype=np.float64)
+        if V.size == 0:
+            return V.reshape(len(configs), len(self.knobs))
+        Vt = V.copy()
+        Vt[:, self._log] = np.log(np.maximum(V[:, self._log],
+                                             self._lo[self._log]))
+        return (Vt - self._lo_t) / (self._hi_t - self._lo_t)
+
+    def decode_batch(self, X: np.ndarray) -> List[Config]:
+        """Decode an ``(N, len(self))`` unit matrix back into configs."""
+        X = np.clip(np.asarray(X, dtype=np.float64), 0.0, 1.0)
+        Vt = self._lo_t + X * (self._hi_t - self._lo_t)
+        V = Vt.copy()
+        V[:, self._log] = np.exp(Vt[:, self._log])
+        V = np.clip(V, self._lo, self._hi)
+        V = np.where(self._int, np.round(V), V)
+        out: List[Config] = []
+        for row in V:
+            out.append({k.name: (int(v) if k.is_int else float(v))
+                        for k, v in zip(self.knobs, row)})
+        return out
+
+    def validate_batch(self,
+                       configs: Sequence[Mapping[str, Any]]) -> List[Config]:
+        """Clip N configs into the domain; unknown keys are rejected."""
+        return [self.validate(c) for c in configs]
 
     def neighbors(
         self, config: Mapping[str, Any], rng: np.random.Generator, n: int = 8,

@@ -1,8 +1,8 @@
 """Epoch-based tiered-memory simulator: the black-box f(θ) the optimizer tunes.
 
 The simulator executes a :class:`~repro.core.workloads.Workload` against a
-:class:`~repro.core.engine.TieringEngine` on a :class:`Machine` and returns the
-workload's execution time.  It models, per epoch of fixed application work:
+tiering engine on a :class:`Machine` and returns the workload's execution
+time.  It models, per epoch of fixed application work:
 
 * **access cost** — bandwidth-bound and latency-bound components per tier,
   using the Table-3 machine characteristics (asymmetric NVM read/write
@@ -17,6 +17,18 @@ workload's execution time.  It models, per epoch of fixed application work:
 * **engine cost** — extra kernel time some engines burn (Memtis page
   allocation/splitting, §4.6).
 
+**Batched evaluation** is the primary entry point:
+:func:`run_simulation_batch` carries a whole batch of B candidate
+configurations through ONE shared workload trace — the engines keep
+``(B, n_pages)`` state, the access-cost model is evaluated as vectorized
+``(B,)`` arithmetic (optionally via ``jax.vmap`` with ``backend="jax"``), and
+the batch can additionally be sharded over a process pool (``workers=N``).
+Per-config random streams are independent and seeded exactly like the
+single-config path, so ``run_simulation_batch([c1..cB])`` returns the same
+numbers as B sequential :func:`run_simulation` calls with matched seeds and
+the same ``sampler``.  :func:`run_simulation` itself is the thin ``B=1``
+wrapper kept for existing callers.
+
 Scaling: ``workload.scale`` shrinks the page count and access volume while
 *time semantics stay real*: effective bandwidth and memory-level parallelism
 shrink by the same factor, so per-page access rates, thresholds, periods and
@@ -28,14 +40,14 @@ engine is instantiated; see :func:`scale_config`.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, List, Mapping, Optional
+import os
+from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
-from .engine import TieringEngine, make_engine
+from .engine import make_batch_engine
 from .knobs import get_space
-from .pages import PAGE_BYTES, TierState
+from .pages import BatchTierState, PAGE_BYTES, migration_rate_pages
 from .workloads import Workload, make_workload
 
 CACHELINE = 64
@@ -140,34 +152,87 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
-# Core loop
+# Access-cost math — one scalar-config definition, reused by the vectorized
+# numpy path and (vmapped) by the optional JAX backend.
 # ---------------------------------------------------------------------------
-def run_simulation(workload: Workload, engine_name: str,
-                   config: Optional[Mapping[str, Any]] = None,
-                   machine: Machine | str = PMEM_LARGE,
-                   fast_slow_ratio: float = 8.0,
-                   seed: int = 0,
-                   record_heatmap: bool = False,
-                   heat_bins: int = 128,
-                   fast_capacity_pages: Optional[int] = None) -> SimResult:
-    """Simulate ``workload`` under ``engine_name``/``config`` on ``machine``.
+def _access_cost(xp, acc_f, acc_s, reads_s, writes_s, promote_bytes,
+                 demote_bytes, w_mig, est_wall_ms, samples, engine_ms,
+                 const: Mapping[str, float]):
+    """Per-config epoch wall-time model.  ``xp`` is numpy or jax.numpy; all
+    per-config inputs are scalars (vmap/broadcast supplies the batch axis)."""
+    bytes_f = acc_f * CACHELINE
+    # bandwidth-bound terms (migration traffic shares the devices)
+    t_near = (bytes_f + promote_bytes + demote_bytes) / const["near_bw"]
+    t_far = ((reads_s * CACHELINE + promote_bytes) / const["far_bw_r"]
+             + (writes_s * CACHELINE + demote_bytes) / const["far_bw_w"])
+    # latency-bound term
+    t_lat = (acc_f * const["near_lat_s"] + acc_s * const["far_lat_s"]) \
+        / const["eff_par"]
+    t_mem = xp.maximum(xp.maximum(t_near, t_far), t_lat)
 
-    ``fast_slow_ratio`` r sets fast-tier capacity = RSS/(1+r) (the paper's
-    "1:r memory size ratio"; default 1:8, §4.1).
-    """
-    if isinstance(machine, str):
-        machine = get_machine(machine)
-    if config is None:
-        config = get_space(engine_name).default_config() \
-            if engine_name in ("hemem", "hmsdk", "memtis") else {}
+    # write-protect stalls: HeMem write-protects in-flight pages, so only
+    # the writes that land *during* a page's copy window stall, each for
+    # half the copy time on average.  Expected stalled writes per page =
+    # page_write_rate x copy_duration; a stalled thread cannot overlap, so
+    # the app-level cost divides by thread count (scale-adjusted).
+    page_copy_s = const["page_copy_s"]
+    epoch_s_est = xp.maximum(est_wall_ms * 1e-3, page_copy_s)
+    frac_in_flight = xp.minimum(page_copy_s / epoch_s_est, 1.0)
+    stall_s = xp.where(
+        (promote_bytes + demote_bytes) > 0,
+        w_mig * frac_in_flight * (page_copy_s / 2.0) / const["stall_denom"],
+        0.0)
 
+    sampling_s = samples * const["probe_us"] * 1e-6 / const["threads_floor"]
+    engine_s = engine_ms * 1e-3
+    wall_ms = (xp.maximum(const["compute_ms"], t_mem * 1e3)
+               + stall_s * 1e3 + sampling_s * 1e3 + engine_s * 1e3)
+    hit_rate = acc_f / xp.maximum(acc_f + acc_s, 1e-12)
+    return wall_ms, stall_s, sampling_s, hit_rate
+
+
+_JAX_COST = None
+
+
+def _jax_cost_fn():
+    """Lazily build the jitted+vmapped JAX version of the access-cost math."""
+    global _JAX_COST
+    if _JAX_COST is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+        except ImportError as e:  # pragma: no cover - env without jax
+            raise RuntimeError(
+                "backend='jax' requires jax; install it or use the default "
+                "numpy backend") from e
+
+        def scalar(acc_f, acc_s, reads_s, writes_s, pb, db, w_mig, est,
+                   samples, engine_ms, const):
+            return _access_cost(jnp, acc_f, acc_s, reads_s, writes_s, pb, db,
+                                w_mig, est, samples, engine_ms, const)
+
+        _JAX_COST = jax.jit(jax.vmap(scalar, in_axes=(0,) * 10 + (None,)))
+    return _JAX_COST
+
+
+# ---------------------------------------------------------------------------
+# Core loop (batched)
+# ---------------------------------------------------------------------------
+def _run_batch_local(workload: Workload, engine_name: str,
+                     configs: Sequence[Mapping[str, Any]],
+                     machine: Machine, fast_slow_ratio: float,
+                     seeds, sampler: str, record_heatmap: bool,
+                     heat_bins: int, fast_capacity_pages: Optional[int],
+                     backend: str) -> List[SimResult]:
+    B = len(configs)
     n = workload.n_pages
     scale = workload.scale
     if fast_capacity_pages is None:
         fast_capacity_pages = max(1, int(round(n / (1.0 + fast_slow_ratio))))
-    tier = TierState(n, fast_capacity_pages)
-    sim_cfg = scale_config(engine_name, config, scale)
-    engine = make_engine(engine_name, sim_cfg, tier, seed=seed)
+    tier = BatchTierState(B, n, fast_capacity_pages)
+    sim_cfgs = [scale_config(engine_name, c, scale) for c in configs]
+    engine = make_batch_engine(engine_name, sim_cfgs, tier, seeds=seeds,
+                               sampler=sampler)
 
     threads = workload.threads
     # effective parallel resources shrink with scale (time stays real)
@@ -176,106 +241,250 @@ def run_simulation(workload: Workload, engine_name: str,
     near_bw = machine.near_bw_gbs * 1e9 * eff_bw
     far_bw_r = machine.far_bw_read_gbs * 1e9 * eff_bw
     far_bw_w = machine.far_bw_write_gbs * 1e9 * eff_bw
-    near_lat_s = machine.near_lat_ns * 1e-9
-    far_lat_s = machine.far_lat_ns * 1e-9
     page_bytes = tier.page_bytes
-
-    n_epochs = workload.n_epochs
-    wall = np.zeros(n_epochs)
-    cum_mig = np.zeros(n_epochs)
-    hit_rate = np.zeros(n_epochs)
-    sampling_ms_a = np.zeros(n_epochs)
-    stall_ms_a = np.zeros(n_epochs)
-    heat = np.zeros((n_epochs, heat_bins)) if record_heatmap else None
-    place = np.zeros((n_epochs, heat_bins)) if record_heatmap else None
-    bin_of = (np.arange(n) * heat_bins // n) if record_heatmap else None
-
     # probe-cost knob: engines that sample pay per-sample CPU; DAMON pays per
     # scan probe (engine reports its probes via samples_last_epoch).
     probe_us = machine.scan_us if engine_name == "hmsdk" else machine.sample_us
+    const = {
+        "near_bw": near_bw, "far_bw_r": far_bw_r, "far_bw_w": far_bw_w,
+        "near_lat_s": machine.near_lat_ns * 1e-9,
+        "far_lat_s": machine.far_lat_ns * 1e-9,
+        "eff_par": eff_par,
+        "page_copy_s": page_bytes / max(min(far_bw_r, near_bw), 1.0),
+        "stall_denom": max(threads * scale, 1e-9),
+        "probe_us": probe_us, "threads_floor": max(threads, 1),
+        "compute_ms": workload.compute_ms,
+    }
 
-    est_wall_ms = workload.epoch_ms  # running estimate fed to the engine
-    total_mig = 0
+    n_epochs = workload.n_epochs
+    wall = np.zeros((n_epochs, B))
+    cum_mig = np.zeros((n_epochs, B))
+    hit_rate = np.zeros((n_epochs, B))
+    sampling_ms_a = np.zeros((n_epochs, B))
+    stall_ms_a = np.zeros((n_epochs, B))
+    heat = np.zeros((n_epochs, heat_bins)) if record_heatmap else None
+    place = np.zeros((B, n_epochs, heat_bins)) if record_heatmap else None
+    bin_of = (np.arange(n) * heat_bins // n) if record_heatmap else None
+    bin_sizes = np.maximum(np.bincount(bin_of, minlength=heat_bins), 1) \
+        if record_heatmap else None
+
+    mig_cost_free = engine.zero_cost_migrations
+    rates = engine.max_rates_gibs()
+    est_wall_ms = np.full(B, workload.epoch_ms)  # running estimate
+    total_mig = np.zeros(B)
+    # per-config reduction buffers
+    acc_f = np.zeros(B)
+    reads_s = np.zeros(B)
+    writes_s = np.zeros(B)
+    w_mig = np.zeros(B)
+    n_promote = np.zeros(B)
+    n_demote = np.zeros(B)
+    cost_fn = _jax_cost_fn() if backend == "jax" else None
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+
     for e in range(n_epochs):
         reads, writes = workload.epoch_access(e)
         touched = (reads + writes) > (1.0 / max(n, 1))
         tier.allocate_first_touch(touched)
 
         engine.observe(reads, writes, est_wall_ms)
-        plan = engine.plan(est_wall_ms, max_pages_this_epoch=_rate_cap(
-            engine, est_wall_ms, page_bytes, scale))
-        mig_pages = plan.n_pages
-        promote_idx, demote_idx = plan.promote, plan.demote
-        tier.apply(plan)
-        total_mig += mig_pages
-        cum_mig[e] = total_mig
+        max_pages = migration_rate_pages(rates, est_wall_ms, page_bytes,
+                                         scale)
+        plans = engine.plan(est_wall_ms, max_pages)
+        tier.apply(plans)
 
-        in_fast = tier.in_fast
         acc = reads + writes
-        acc_f = float(acc[in_fast].sum())
-        acc_s = float(acc.sum() - acc_f)
-        reads_s = float(reads[~in_fast].sum())
-        writes_s = float(writes[~in_fast].sum())
-        bytes_f = acc_f * CACHELINE
-        promote_bytes = len(promote_idx) * page_bytes
-        demote_bytes = len(demote_idx) * page_bytes
-        mig_cost_free = engine.zero_cost_migrations
+        acc_sum = float(acc.sum())
+        # boolean-mask extraction sums, NOT matvecs: the float summation
+        # order must match the historical scalar path bit-for-bit so that
+        # batch results stay exactly equal to sequential runs
+        for b, plan in enumerate(plans):
+            in_fast_b = tier.in_fast[b]
+            acc_f[b] = float(acc[in_fast_b].sum())
+            slow = ~in_fast_b
+            reads_s[b] = float(reads[slow].sum())
+            writes_s[b] = float(writes[slow].sum())
+            n_promote[b] = len(plan.promote)
+            n_demote[b] = len(plan.demote)
+            total_mig[b] += plan.n_pages
+            if plan.n_pages and not mig_cost_free:
+                w_mig[b] = float(writes[plan.promote].sum()
+                                 + writes[plan.demote].sum())
+            else:
+                w_mig[b] = 0.0
+        cum_mig[e] = total_mig
+        acc_s = acc_sum - acc_f
         if mig_cost_free:
-            promote_bytes = demote_bytes = 0.0
-
-        # bandwidth-bound terms (migration traffic shares the devices)
-        t_near = (bytes_f + promote_bytes + demote_bytes) / near_bw
-        t_far = ((reads_s * CACHELINE + promote_bytes) / far_bw_r
-                 + (writes_s * CACHELINE + demote_bytes) / far_bw_w)
-        # latency-bound term
-        t_lat = (acc_f * near_lat_s + acc_s * far_lat_s) / eff_par
-        t_mem = max(t_near, t_far, t_lat)
-
-        # write-protect stalls: HeMem write-protects in-flight pages, so only
-        # the writes that land *during* a page's copy window stall, each for
-        # half the copy time on average.  Expected stalled writes per page =
-        # page_write_rate x copy_duration; a stalled thread cannot overlap, so
-        # the app-level cost divides by thread count (scale-adjusted).
-        if mig_pages and not mig_cost_free:
-            w_mig = float(writes[promote_idx].sum() + writes[demote_idx].sum())
-            page_copy_s = page_bytes / max(min(far_bw_r, near_bw), 1.0)
-            epoch_s_est = max(est_wall_ms * 1e-3, page_copy_s)
-            frac_in_flight = min(page_copy_s / epoch_s_est, 1.0)
-            stall_s = (w_mig * frac_in_flight * (page_copy_s / 2.0)
-                       / max(threads * scale, 1e-9))
+            promote_bytes = np.zeros(B)
+            demote_bytes = np.zeros(B)
         else:
-            stall_s = 0.0
+            promote_bytes = n_promote * page_bytes
+            demote_bytes = n_demote * page_bytes
 
-        sampling_s = engine.samples_last_epoch * probe_us * 1e-6 / max(threads, 1)
-        engine_s = engine.overhead_ms_last_epoch * 1e-3
-
-        wall_ms = (max(workload.compute_ms, t_mem * 1e3)
-                   + stall_s * 1e3 + sampling_s * 1e3 + engine_s * 1e3)
+        wall_ms, stall_s, sampling_s, hr = (
+            cost_fn(acc_f, acc_s, reads_s, writes_s, promote_bytes,
+                    demote_bytes, w_mig, est_wall_ms,
+                    engine.samples_last_epoch,
+                    engine.overhead_ms_last_epoch, const)
+            if cost_fn is not None else
+            _access_cost(np, acc_f, acc_s, reads_s, writes_s, promote_bytes,
+                         demote_bytes, w_mig, est_wall_ms,
+                         engine.samples_last_epoch,
+                         engine.overhead_ms_last_epoch, const))
         wall[e] = wall_ms
-        est_wall_ms = wall_ms
-        hit_rate[e] = acc_f / max(acc_f + acc_s, 1e-12)
-        sampling_ms_a[e] = sampling_s * 1e3
-        stall_ms_a[e] = stall_s * 1e3
+        est_wall_ms = np.asarray(wall_ms, dtype=np.float64)
+        hit_rate[e] = hr
+        sampling_ms_a[e] = np.asarray(sampling_s) * 1e3
+        stall_ms_a[e] = np.asarray(stall_s) * 1e3
 
         if record_heatmap:
             heat[e] = np.bincount(bin_of, weights=acc, minlength=heat_bins)
-            place[e] = (np.bincount(bin_of, weights=in_fast.astype(np.float64),
-                                    minlength=heat_bins)
-                        / np.maximum(np.bincount(bin_of, minlength=heat_bins), 1))
+            for b in range(B):
+                place[b, e] = (np.bincount(
+                    bin_of, weights=tier.in_fast[b].astype(np.float64),
+                    minlength=heat_bins) / bin_sizes)
 
-    return SimResult(
+    return [SimResult(
         workload=workload.key, engine=engine_name, machine=machine.name,
-        config=dict(config), total_s=float(wall.sum() / 1e3),
-        epoch_wall_ms=wall, cum_migrations=cum_mig, fast_hit_rate=hit_rate,
-        sampling_ms=sampling_ms_a, stall_ms=stall_ms_a,
-        heatmap=heat, placement=place)
+        config=dict(configs[b]), total_s=float(wall[:, b].sum() / 1e3),
+        epoch_wall_ms=wall[:, b].copy(), cum_migrations=cum_mig[:, b].copy(),
+        fast_hit_rate=hit_rate[:, b].copy(),
+        sampling_ms=sampling_ms_a[:, b].copy(),
+        stall_ms=stall_ms_a[:, b].copy(),
+        # the access heatmap comes from the shared trace, so all B results
+        # reference one array; placement is per config
+        heatmap=heat if record_heatmap else None,
+        placement=place[b] if record_heatmap else None) for b in range(B)]
 
 
-def _rate_cap(engine: TieringEngine, epoch_ms: float, page_bytes: int,
-              scale: float) -> int:
-    """Scaled migration-rate cap in sim pages for this epoch."""
-    rate = float(engine.config.get("max_migration_rate", 1e9))
-    return max(0, int(rate * (2 ** 30) * (epoch_ms / 1e3) / page_bytes * scale))
+# ---------------------------------------------------------------------------
+# Process-pool sharding for batch evaluation
+# ---------------------------------------------------------------------------
+_POOL = None
+_POOL_SIZE = 0
+
+
+def _get_pool(workers: int):
+    global _POOL, _POOL_SIZE
+    # a larger warm pool serves smaller requests (e.g. a tuning run's partial
+    # final batch) — only grow, never tear down and respawn mid-run
+    if _POOL is None or workers > _POOL_SIZE:
+        import concurrent.futures
+        import multiprocessing as mp
+        if _POOL is not None:
+            _POOL.shutdown(wait=False, cancel_futures=True)
+        # forking a parent whose XLA runtime is already initialized is
+        # unsupported (threads are not inherited) and can hang the workers;
+        # fall back to spawn once jax has been imported
+        import sys
+        use_fork = "fork" in mp.get_all_start_methods() and \
+            "jax" not in sys.modules
+        ctx = mp.get_context("fork" if use_fork else "spawn")
+        _POOL = concurrent.futures.ProcessPoolExecutor(max_workers=workers,
+                                                       mp_context=ctx)
+        _POOL_SIZE = workers
+    return _POOL
+
+
+def _shard_worker(args):
+    (wl_spec, engine_name, configs, machine, fast_slow_ratio, seeds, sampler,
+     record_heatmap, heat_bins, fast_capacity_pages, backend) = args
+    wl = make_workload(*wl_spec)
+    return _run_batch_local(wl, engine_name, configs, machine,
+                            fast_slow_ratio, seeds, sampler, record_heatmap,
+                            heat_bins, fast_capacity_pages, backend)
+
+
+def _resolve_workers(workers, batch: int) -> int:
+    if workers in ("auto", 0, None):
+        workers = os.cpu_count() or 1
+    return max(1, min(int(workers), batch))
+
+
+def run_simulation_batch(workload: Workload, engine_name: str,
+                         configs: Sequence[Mapping[str, Any]],
+                         machine: Machine | str = PMEM_LARGE,
+                         fast_slow_ratio: float = 8.0,
+                         seeds=0,
+                         sampler: str = "sparse",
+                         record_heatmap: bool = False,
+                         heat_bins: int = 128,
+                         fast_capacity_pages: Optional[int] = None,
+                         backend: str = "numpy",
+                         workers: int = 1) -> List[SimResult]:
+    """Simulate ``workload`` under B candidate configs in one pass.
+
+    The workload trace is generated once and shared; engine state carries a
+    leading batch axis.  Per-config RNG streams are seeded from ``seeds``
+    (an int, applied to every config — matching how sequential tuning reuses
+    one scenario seed — or a per-config sequence), so results are numerically
+    identical to B sequential :func:`run_simulation` calls with matched
+    ``seed`` and ``sampler``.  ``sampler="sparse"`` (default) draws the exact
+    Poisson sampling distribution at cost ∝ events; ``"elementwise"``
+    reproduces the historical per-page draws bit-for-bit.  ``workers > 1``
+    (or ``"auto"``) shards the batch over a persistent process pool;
+    sharding never changes results, only wall time.
+    """
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    configs = [dict(c) for c in configs]
+    B = len(configs)
+    if B == 0:
+        return []
+    if np.ndim(seeds) == 0:
+        seeds = [int(seeds)] * B
+    seeds = [int(s) for s in seeds]
+    if len(seeds) != B:
+        raise ValueError("seeds must be an int or one seed per config")
+    workers = _resolve_workers(workers, B)
+    if workers == 1:
+        return _run_batch_local(workload, engine_name, configs, machine,
+                                fast_slow_ratio, seeds, sampler,
+                                record_heatmap, heat_bins,
+                                fast_capacity_pages, backend)
+    wl_spec = (workload.name, workload.input_name, workload.threads,
+               workload.scale, workload.seed)
+    bounds = np.linspace(0, B, workers + 1).astype(int)
+    pool = _get_pool(workers)
+    futures = []
+    for w in range(workers):
+        lo, hi = int(bounds[w]), int(bounds[w + 1])
+        if lo == hi:
+            continue
+        futures.append(pool.submit(_shard_worker, (
+            wl_spec, engine_name, configs[lo:hi], machine, fast_slow_ratio,
+            seeds[lo:hi], sampler, record_heatmap, heat_bins,
+            fast_capacity_pages, backend)))
+    out: List[SimResult] = []
+    for f in futures:
+        out.extend(f.result())
+    return out
+
+
+def run_simulation(workload: Workload, engine_name: str,
+                   config: Optional[Mapping[str, Any]] = None,
+                   machine: Machine | str = PMEM_LARGE,
+                   fast_slow_ratio: float = 8.0,
+                   seed: int = 0,
+                   record_heatmap: bool = False,
+                   heat_bins: int = 128,
+                   fast_capacity_pages: Optional[int] = None,
+                   sampler: str = "elementwise") -> SimResult:
+    """Simulate ``workload`` under ``engine_name``/``config`` on ``machine``.
+
+    Thin ``B=1`` wrapper over :func:`run_simulation_batch` kept for existing
+    callers.  ``fast_slow_ratio`` r sets fast-tier capacity = RSS/(1+r) (the
+    paper's "1:r memory size ratio"; default 1:8, §4.1).
+    """
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    if config is None:
+        config = get_space(engine_name).default_config() \
+            if engine_name in ("hemem", "hmsdk", "memtis") else {}
+    return _run_batch_local(workload, engine_name, [config], machine,
+                            fast_slow_ratio, [seed], sampler, record_heatmap,
+                            heat_bins, fast_capacity_pages, "numpy")[0]
 
 
 # ---------------------------------------------------------------------------
@@ -284,7 +493,8 @@ def _rate_cap(engine: TieringEngine, epoch_ms: float, page_bytes: int,
 def evaluate(engine_name: str, config: Mapping[str, Any], workload_name: str,
              input_name: str = "", machine: Machine | str = PMEM_LARGE,
              threads: Optional[int] = None, scale: float = 0.25,
-             fast_slow_ratio: float = 8.0, seed: int = 0) -> float:
+             fast_slow_ratio: float = 8.0, seed: int = 0,
+             sampler: str = "elementwise") -> float:
     """Execution time (seconds) of one workload run — the objective of §3."""
     if isinstance(machine, str):
         machine = get_machine(machine)
@@ -292,8 +502,29 @@ def evaluate(engine_name: str, config: Mapping[str, Any], workload_name: str,
     wl = make_workload(workload_name, input_name, threads=t, scale=scale,
                        seed=seed)
     res = run_simulation(wl, engine_name, config, machine,
-                         fast_slow_ratio=fast_slow_ratio, seed=seed)
+                         fast_slow_ratio=fast_slow_ratio, seed=seed,
+                         sampler=sampler)
     return res.total_s
+
+
+def evaluate_batch(engine_name: str, configs: Sequence[Mapping[str, Any]],
+                   workload_name: str, input_name: str = "",
+                   machine: Machine | str = PMEM_LARGE,
+                   threads: Optional[int] = None, scale: float = 0.25,
+                   fast_slow_ratio: float = 8.0, seed: int = 0,
+                   sampler: str = "sparse", workers: int = 1,
+                   backend: str = "numpy") -> List[float]:
+    """Batched objective: execution times of all B candidate configs."""
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    t = threads if threads is not None else machine.default_threads
+    wl = make_workload(workload_name, input_name, threads=t, scale=scale,
+                       seed=seed)
+    results = run_simulation_batch(wl, engine_name, configs, machine,
+                                   fast_slow_ratio=fast_slow_ratio,
+                                   seeds=seed, sampler=sampler,
+                                   workers=workers, backend=backend)
+    return [r.total_s for r in results]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -312,6 +543,16 @@ class Scenario:
             return evaluate(engine_name, config, self.workload,
                             self.input_name, self.machine, self.threads,
                             self.scale, self.fast_slow_ratio, self.seed)
+        return f
+
+    def objective_batch(self, engine_name: str, sampler: str = "sparse",
+                        workers: int = 1, backend: str = "numpy"):
+        def f(configs: Sequence[Mapping[str, Any]]) -> List[float]:
+            return evaluate_batch(engine_name, configs, self.workload,
+                                  self.input_name, self.machine, self.threads,
+                                  self.scale, self.fast_slow_ratio, self.seed,
+                                  sampler=sampler, workers=workers,
+                                  backend=backend)
         return f
 
     @property

@@ -61,6 +61,9 @@ class Workload:
     compute_ms: float        # non-memory CPU floor per epoch
     scale: float
     epoch_access: Callable[[int], Tuple[np.ndarray, np.ndarray]]
+    seed: int = 0            # build seed: (name, input, threads, scale, seed)
+                             # fully determines the trace, so a workload can
+                             # be rebuilt in batch-evaluation worker processes
 
     @property
     def key(self) -> str:
@@ -108,7 +111,7 @@ def _gups(input_name: str, threads: int, scale: float, seed: int) -> Workload:
 
     return Workload("gups", input_name, rss, n, n_epochs, epoch_ms, threads,
                     mlp=8.0, compute_ms=40.0, scale=scale,
-                    epoch_access=epoch_access)
+                    epoch_access=epoch_access, seed=seed)
 
 
 def _silo(input_name: str, threads: int, scale: float, seed: int) -> Workload:
@@ -160,7 +163,7 @@ def _silo(input_name: str, threads: int, scale: float, seed: int) -> Workload:
 
     return Workload("silo", input_name, rss, n, n_epochs, epoch_ms, threads,
                     mlp=6.0, compute_ms=compute, scale=scale,
-                    epoch_access=epoch_access)
+                    epoch_access=epoch_access, seed=seed)
 
 
 def _gapbs(kind: str, input_name: str, threads: int, scale: float,
@@ -221,7 +224,7 @@ def _gapbs(kind: str, input_name: str, threads: int, scale: float,
 
     return Workload(f"gapbs-{kind}", input_name, rss, n, n_epochs, epoch_ms,
                     threads, mlp=7.0, compute_ms=180.0, scale=scale,
-                    epoch_access=epoch_access)
+                    epoch_access=epoch_access, seed=seed)
 
 
 def _btree(input_name: str, threads: int, scale: float, seed: int) -> Workload:
@@ -273,7 +276,7 @@ def _btree(input_name: str, threads: int, scale: float, seed: int) -> Workload:
 
     return Workload("btree", input_name, rss, n, n_epochs, epoch_ms, threads,
                     mlp=4.0, compute_ms=60.0, scale=scale,
-                    epoch_access=epoch_access)
+                    epoch_access=epoch_access, seed=seed)
 
 
 def _xsbench(input_name: str, threads: int, scale: float, seed: int) -> Workload:
@@ -302,7 +305,7 @@ def _xsbench(input_name: str, threads: int, scale: float, seed: int) -> Workload
 
     return Workload("xsbench", input_name, rss, n, n_epochs, epoch_ms, threads,
                     mlp=7.0, compute_ms=200.0, scale=scale,
-                    epoch_access=epoch_access)
+                    epoch_access=epoch_access, seed=seed)
 
 
 def _graph500(input_name: str, threads: int, scale: float, seed: int) -> Workload:
@@ -329,7 +332,7 @@ def _graph500(input_name: str, threads: int, scale: float, seed: int) -> Workloa
 
     return Workload("graph500", input_name, rss, n, n_epochs, epoch_ms,
                     threads, mlp=8.0, compute_ms=600.0, scale=scale,
-                    epoch_access=epoch_access)
+                    epoch_access=epoch_access, seed=seed)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,284 @@
+"""Batched evaluation pipeline tests.
+
+The core contract: ``run_simulation_batch`` with B configs produces
+per-config results numerically equal to B sequential ``run_simulation``
+calls with matched seeds (for both sampling backends), batching/sharding
+never changes results, and the batch-SMAC path preserves sequential
+semantics at q=1.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.bo.rf import RandomForest
+from repro.core.bo.smac import RandomSearch, SMACOptimizer
+from repro.core.bo.tuner import TuningSession
+from repro.core.engine import OracleEngine, make_batch_engine
+from repro.core.knobs import HEMEM_SPACE, HMSDK_SPACE, MEMTIS_SPACE, get_space
+from repro.core.pages import (BatchTierState, MigrationPlan, TierState,
+                              migration_rate_pages)
+from repro.core.simulator import (Scenario, run_simulation,
+                                  run_simulation_batch)
+from repro.core.workloads import make_workload
+
+ALL_ENGINES = ("hemem", "hmsdk", "memtis", "static", "oracle")
+
+
+def _configs_for(engine, n, seed=5):
+    if engine in ("hemem", "hmsdk", "memtis"):
+        space = get_space(engine)
+        rng = np.random.default_rng(seed)
+        return [space.default_config()] + [space.sample(rng)
+                                           for _ in range(n - 1)]
+    return [{} for _ in range(n)]
+
+
+def _assert_results_equal(a, b):
+    assert a.total_s == b.total_s
+    assert np.array_equal(a.epoch_wall_ms, b.epoch_wall_ms)
+    assert np.array_equal(a.cum_migrations, b.cum_migrations)
+    assert np.array_equal(a.fast_hit_rate, b.fast_hit_rate)
+    assert np.array_equal(a.sampling_ms, b.sampling_ms)
+    assert np.array_equal(a.stall_ms, b.stall_ms)
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("sampler", ["sparse", "elementwise"])
+def test_batch_equals_sequential(engine, sampler):
+    """B batched configs == B sequential runs with matched seeds."""
+    wl = make_workload("gups", "8GiB-hot", threads=8, scale=0.04, seed=3)
+    cfgs = _configs_for(engine, 3)
+    batch = run_simulation_batch(wl, engine, cfgs, "pmem-large", seeds=7,
+                                 sampler=sampler)
+    for cfg, b in zip(cfgs, batch):
+        s = run_simulation(wl, engine, cfg, "pmem-large", seed=7,
+                           sampler=sampler)
+        _assert_results_equal(b, s)
+
+
+def test_batch_per_config_seeds():
+    """A per-config seed vector matches per-seed sequential runs."""
+    wl = make_workload("silo", "ycsb-c", threads=8, scale=0.04, seed=1)
+    cfgs = _configs_for("hemem", 3)
+    seeds = [11, 12, 13]
+    batch = run_simulation_batch(wl, "hemem", cfgs, "pmem-large", seeds=seeds)
+    for cfg, seed, b in zip(cfgs, seeds, batch):
+        s = run_simulation(wl, "hemem", cfg, "pmem-large", seed=seed,
+                           sampler="sparse")
+        _assert_results_equal(b, s)
+
+
+def test_batch_sharding_invariance():
+    """workers only changes wall time, never results."""
+    if (os.cpu_count() or 1) < 2:
+        pytest.skip("needs >= 2 CPUs")
+    wl = make_workload("gups", "8GiB-hot", threads=8, scale=0.04, seed=2)
+    cfgs = _configs_for("hemem", 4)
+    one = run_simulation_batch(wl, "hemem", cfgs, "pmem-large", seeds=9)
+    two = run_simulation_batch(wl, "hemem", cfgs, "pmem-large", seeds=9,
+                               workers=2)
+    for a, b in zip(one, two):
+        _assert_results_equal(a, b)
+
+
+def test_batch_jax_backend_matches_numpy():
+    """The vmapped access-cost math agrees with the numpy path."""
+    pytest.importorskip("jax")
+    wl = make_workload("xsbench", "", threads=8, scale=0.04, seed=4)
+    cfgs = _configs_for("hemem", 2)
+    a = run_simulation_batch(wl, "hemem", cfgs, "pmem-large", seeds=5)
+    b = run_simulation_batch(wl, "hemem", cfgs, "pmem-large", seeds=5,
+                             backend="jax")
+    for ra, rb in zip(a, b):
+        # jax defaults to float32: allow small numerical slack
+        assert np.allclose(ra.epoch_wall_ms, rb.epoch_wall_ms, rtol=2e-3)
+        assert abs(ra.total_s - rb.total_s) / ra.total_s < 2e-3
+
+
+def test_sparse_sampler_distribution():
+    """sparse and elementwise sampling agree in distribution (mean/var)."""
+    wl = make_workload("gups", "8GiB-hot", threads=8, scale=0.04, seed=0)
+    reads, _ = wl.epoch_access(0)
+    lam = reads / 5000.0
+    from repro.core.engine import sparse_poisson
+    rng = np.random.default_rng(0)
+    S = np.stack([sparse_poisson(rng, reads, 1.0 / 5000.0)
+                  for _ in range(300)])
+    # Poisson: mean == var == lam
+    hot = lam > 1.0
+    assert abs(S[:, hot].mean() - lam[hot].mean()) / lam[hot].mean() < 0.05
+    assert abs(S[:, hot].var() - lam[hot].mean()) / lam[hot].mean() < 0.10
+    cold = ~hot
+    assert abs(S[:, cold].mean() - lam[cold].mean()) / lam[cold].mean() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Batched tier state
+# ---------------------------------------------------------------------------
+def test_batch_tier_state_matches_sequential_loop():
+    rng = np.random.default_rng(0)
+    n, cap, B = 128, 16, 3
+    btier = BatchTierState(B, n, cap)
+    tiers = [TierState(n, cap) for _ in range(B)]
+    for step in range(5):
+        touched = rng.uniform(size=n) < 0.4
+        counts = btier.allocate_first_touch(touched)
+        for b, t in enumerate(tiers):
+            assert t.allocate_first_touch(touched) == counts[b]
+        plans = []
+        for b, t in enumerate(tiers):
+            cand = np.flatnonzero(t.allocated & ~t.in_fast)
+            k = min(len(cand), t.fast_free, 1 + b)
+            promote = cand[:k]
+            plans.append(MigrationPlan(promote=promote,
+                                       demote=np.zeros(0, np.int64)))
+            t.apply(plans[-1])
+        btier.apply(plans)
+        for b, t in enumerate(tiers):
+            assert np.array_equal(btier.in_fast[b], t.in_fast)
+            assert btier.total_promoted[b] == t.total_promoted
+
+
+def test_batch_allocation_mixed_mask_forms():
+    """Regression: after a per-row (B, n) allocation diverges the rows, a
+    later shared (n,) mask must still allocate on every row (the row-0
+    no-new-pages shortcut only applies while rows are provably uniform)."""
+    bt = BatchTierState(2, 8, 4)
+    per_row = np.zeros((2, 8), bool)
+    per_row[0, :4] = True          # row 1 touches nothing
+    bt.allocate_first_touch(per_row)
+    shared = np.zeros(8, bool)
+    shared[:4] = True              # row 0 already has these, row 1 does not
+    counts = bt.allocate_first_touch(shared)
+    assert counts.tolist() == [0, 4]
+    assert bt.allocated[1, :4].all()
+
+
+def test_tierstate_is_thin_batch_wrapper():
+    t = TierState(16, 4)
+    assert t.batch_state.batch == 1
+    t.allocate_first_touch(np.ones(16, bool))
+    assert t.fast_used == 4
+    assert t.in_fast is not None and t.in_fast.shape == (16,)
+    with pytest.raises(AssertionError):
+        t.apply(MigrationPlan(promote=np.array([0]),
+                              demote=np.zeros(0, np.int64)))
+
+
+def test_migration_rate_pages_shared_helper():
+    # scalar and vector forms agree and keep int-truncation semantics
+    assert migration_rate_pages(10, 500.0, 2 ** 21) == \
+        int(10 * 2 ** 30 * 0.5 / 2 ** 21)
+    vec = migration_rate_pages(np.array([10.0, 2.0]),
+                               np.array([500.0, 500.0]), 2 ** 21)
+    assert vec.tolist() == [migration_rate_pages(10.0, 500.0, 2 ** 21),
+                            migration_rate_pages(2.0, 500.0, 2 ** 21)]
+
+
+def test_oracle_promotions_never_exceed_post_demotion_capacity():
+    """Regression: with few demotion candidates the oracle must cap its
+    promotions at the post-demotion free capacity."""
+    tier = TierState(32, 4)
+    tier.allocate_first_touch(np.ones(32, bool))
+    eng = OracleEngine({}, tier)
+    heat = np.arange(32, dtype=float)
+    for _ in range(3):
+        eng.observe(heat, np.zeros(32), 500.0)
+        plan = eng.plan(500.0, 10 ** 6)
+        assert len(plan.promote) <= tier.fast_free + len(plan.demote)
+        tier.apply(plan)  # would assert on capacity violation
+    assert set(np.flatnonzero(tier.in_fast)) == set(range(28, 32))
+
+
+# ---------------------------------------------------------------------------
+# Batched knob encoding
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("space", [HEMEM_SPACE, HMSDK_SPACE, MEMTIS_SPACE])
+def test_encode_decode_batch_match_scalar(space):
+    rng = np.random.default_rng(3)
+    cfgs = [space.sample(rng) for _ in range(16)]
+    X = space.encode_batch(cfgs)
+    assert X.shape == (16, len(space))
+    for i, c in enumerate(cfgs):
+        assert np.allclose(X[i], space.encode(c), atol=1e-12)
+    decoded = space.decode_batch(X)
+    for i, row in enumerate(X):
+        assert decoded[i] == space.decode(row)
+
+
+def test_validate_batch_matches_scalar():
+    cfgs = [{"sampling_period": 1}, {"sampling_period": 1e9},
+            {"read_hot_threshold": 7.6}]
+    assert HEMEM_SPACE.validate_batch(cfgs) == \
+        [HEMEM_SPACE.validate(c) for c in cfgs]
+    with pytest.raises(KeyError):
+        HEMEM_SPACE.validate_batch([{"bogus": 1}])
+
+
+# ---------------------------------------------------------------------------
+# Batch-SMAC
+# ---------------------------------------------------------------------------
+def test_rf_predict_batch_matches_predict():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(80, 5))
+    y = X[:, 0] + np.sin(4 * X[:, 1])
+    rf = RandomForest(seed=1).fit(X, y)
+    Xt = rng.uniform(size=(64, 5))
+    m1, s1 = rf.predict(Xt)
+    m2, s2 = rf.predict_batch(Xt)
+    assert np.array_equal(m1, m2)
+    assert np.array_equal(s1, s2)
+
+
+def test_ask_batch_q1_is_bit_identical_to_ask():
+    a = SMACOptimizer(HEMEM_SPACE, seed=42, n_init=3)
+    b = SMACOptimizer(HEMEM_SPACE, seed=42, n_init=3)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        ca = a.ask()
+        cb = b.ask_batch(1)[0]
+        assert ca == cb
+        v = float(rng.uniform(1, 10))
+        a.tell(ca, v)
+        b.tell_batch([cb], [v])
+
+
+def test_ask_batch_fills_exploration_then_model_slots():
+    opt = SMACOptimizer(HEMEM_SPACE, seed=1, n_init=4)
+    first = opt.ask_batch(6)
+    assert len(first) == 6
+    assert first[0] == HEMEM_SPACE.default_config()
+    rng = np.random.default_rng(0)
+    opt.tell_batch(first, [float(rng.uniform(10, 100)) for _ in first])
+    nxt = opt.ask_batch(6)
+    assert len(nxt) == 6
+    for cfg in nxt:
+        for k in HEMEM_SPACE:
+            assert k.lo <= cfg[k.name] <= k.hi
+    # model-based slots must be distinct suggestions
+    keys = [tuple(sorted(c.items())) for c in nxt]
+    assert len(set(keys)) > 1
+
+
+def test_random_search_ask_batch():
+    opt = RandomSearch(HEMEM_SPACE, seed=0)
+    batch = opt.ask_batch(4)
+    assert batch[0] == HEMEM_SPACE.default_config()
+    opt.tell_batch(batch, [1.0, 2.0, 3.0, 4.0])
+    assert opt.best.value == 1.0
+    assert opt.ask_batch(2)[0] != HEMEM_SPACE.default_config() or True
+    assert len(opt.observations) == 4
+
+
+def test_tuning_session_batch_budget_and_history():
+    sc = Scenario(workload="gups", input_name="8GiB-hot", scale=0.04)
+    session = TuningSession(
+        "hemem", sc.objective("hemem"), scenario_key=sc.key, budget=10,
+        seed=0, n_init=4, batch_size=4,
+        objective_batch=sc.objective_batch("hemem"))
+    res = session.run()
+    assert len(res.history) == 10
+    assert res.best_value <= res.history[0].value
+    assert res.default_value > 0

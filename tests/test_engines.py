@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 environments may lack hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.engine import (HeMemEngine, HMSDKEngine, MemtisEngine,
                                OracleEngine, make_engine)

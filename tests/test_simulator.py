@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 environments may lack hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.knobs import HEMEM_SPACE
 from repro.core.simulator import (MACHINES, NUMA, PMEM_LARGE, PMEM_SMALL,
