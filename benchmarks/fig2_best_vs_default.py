@@ -3,14 +3,24 @@ on pmem-large.
 
 Paper claims: improvements of 1.07-2.09x for all workloads barring Graph500
 (which shows ~no gain).
+
+Ported to the typed Study API (PR 2): each tuning session evaluates whole
+candidate batches per SMAC round (``batch_size=4``, process-pool sharded),
+and the final default-vs-best bars come from one ``Study.sweep`` batched
+pass per workload instead of sequential re-evaluations.  Result payloads
+embed the replayable ``ExperimentSpec``.
 """
 
 from __future__ import annotations
 
-from repro.core.simulator import Scenario
-from repro.core.bo.tuner import tune_scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
+from repro.core.knobs import HEMEM_SPACE
 
 from .common import SUITE, budget, claim, print_claims, save
+
+# q=4 keeps enough adaptive SMAC rounds at quick budgets while still
+# cutting wall-clock ~2-3x on this box (see fig9 note)
+BATCH_SIZE = 4
 
 
 def run(quick: bool = False) -> dict:
@@ -18,20 +28,28 @@ def run(quick: bool = False) -> dict:
     claims = []
     imps = {}
     for wname, inp in SUITE:
-        sc = Scenario(wname, inp)
-        res = tune_scenario("hemem", sc, budget=budget(quick), seed=3)
-        imps[sc.key] = res.improvement
-        out["workloads"][sc.key] = {
-            "default_s": res.default_value,
-            "best_s": res.best_value,
-            "improvement": res.improvement,
+        study = Study(ExperimentSpec(
+            engine="hemem", workload=WorkloadSpec(wname, inp),
+            options=SimOptions(sampler="sparse", workers="auto")))
+        res = study.tune(budget=budget(quick), batch_size=BATCH_SIZE, seed=3)
+        # one batched pass re-scores {default, best} through a shared trace
+        sweep = study.sweep(configs=[HEMEM_SPACE.default_config(),
+                                     res.best.config])
+        default_s, best_s = sweep.total_s()[("hemem", study.spec.workload.key)]
+        imp = default_s / best_s
+        imps[study.key] = imp
+        out["workloads"][study.key] = {
+            "spec": study.spec.to_dict(),
+            "default_s": default_s,
+            "best_s": best_s,
+            "improvement": imp,
             "best_config": res.best.config,
             "incumbent": res.incumbent_trajectory(),
         }
-        print(f"  {sc.key:22s} default={res.default_value:8.1f}s "
-              f"best={res.best_value:8.1f}s  {res.improvement:.2f}x", flush=True)
+        print(f"  {study.key:34s} default={default_s:8.1f}s "
+              f"best={best_s:8.1f}s  {imp:.2f}x", flush=True)
 
-    non_g500 = {k: v for k, v in imps.items() if not k.startswith("graph500")}
+    non_g500 = {k: v for k, v in imps.items() if "graph500" not in k}
     claims.append(claim(
         "fig2: non-graph500 improvements within ~[1.07, 2.09]x band",
         all(1.02 <= v <= 2.30 for v in non_g500.values()),
@@ -40,7 +58,7 @@ def run(quick: bool = False) -> dict:
         "fig2: most workloads show >= 1.07x gains",
         sum(v >= 1.07 for v in non_g500.values()) >= len(non_g500) - 1,
         f"{sum(v >= 1.07 for v in non_g500.values())}/{len(non_g500)}"))
-    g500 = [v for k, v in imps.items() if k.startswith("graph500")][0]
+    g500 = [v for k, v in imps.items() if "graph500" in k][0]
     claims.append(claim(
         "fig2: graph500 shows the least gain (~none)",
         g500 <= 1.10 and g500 <= min(non_g500.values()) + 0.05,

@@ -4,17 +4,27 @@
 Paper claims: (a) consistent gains across thread counts, best knob values
 differ per thread count; (b) tuning matters most for small fast tiers
 (1:16, 1:8) and the optimizer adapts thresholds to the ratio.
+
+Ported to the typed Study API (PR 2): every point of the sweep is an
+``ExperimentSpec`` (embedded in the result payload for replay) and each
+tuning session evaluates whole candidate batches per SMAC round
+(``batch_size=4``, process-pool sharded) instead of sequentially.
 """
 
 from __future__ import annotations
 
-from repro.core.simulator import Scenario
-from repro.core.bo.tuner import tune_scenario
+import dataclasses
+
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 
 from .common import budget, claim, print_claims, save
 
 THREADS = [2, 4, 8]
 RATIOS = [16.0, 8.0, 2.0, 1.0, 0.5]   # fast:slow = 1:r (r=0.5 -> 2:1)
+# q=4 keeps enough adaptive SMAC rounds at quick budgets (q=8 loses the
+# marginal bc-twitter gains) while still cutting wall-clock ~2-3x here
+BATCH_SIZE = 4
+OPTS = SimOptions(sampler="sparse", workers="auto")
 
 
 def run(quick: bool = False) -> dict:
@@ -26,13 +36,18 @@ def run(quick: bool = False) -> dict:
     per_thread_cfgs = {}
     for wname, inp in [("gups", "8GiB-hot"), ("gapbs-bc", "twitter")]:
         for t in (THREADS[:2] if quick else THREADS):
-            sc = Scenario(wname, inp, machine="pmem-small", threads=t)
-            res = tune_scenario("hemem", sc, budget=b, seed=13 + t)
+            study = Study(ExperimentSpec(
+                engine="hemem",
+                workload=WorkloadSpec(wname, inp, threads=t),
+                machine="pmem-small", options=OPTS))
+            res = study.tune(budget=b, batch_size=BATCH_SIZE, seed=13 + t)
             key = f"{wname}:{inp}@t{t}"
-            out["threads"][key] = {"improvement": res.improvement,
+            out["threads"][key] = {"spec": study.spec.to_dict(),
+                                   "improvement": res.improvement,
                                    "best_config": res.best.config}
             per_thread_cfgs.setdefault(wname, {})[t] = res
-            print(f"  threads={t:2d} {wname:12s} {res.improvement:.2f}x", flush=True)
+            print(f"  threads={t:2d} {wname:12s} {res.improvement:.2f}x",
+                  flush=True)
     # "consistent performance improvement for all thread counts" — gains at
     # every point; BC-twitter magnitudes are small in our model (small-RSS
     # fast-cooling, see EXPERIMENTS.md deviations)
@@ -51,15 +66,18 @@ def run(quick: bool = False) -> dict:
         "fig9a: best knob values differ across thread counts",
         all(diff_cfgs), f"distinct-per-thread: {diff_cfgs}"))
 
-    # (b) memory ratios, GUPS on pmem-small
+    # (b) memory ratios, GUPS on pmem-small — one base spec, replaced per r
+    base = ExperimentSpec(engine="hemem",
+                          workload=WorkloadSpec("gups", "8GiB-hot", threads=4),
+                          machine="pmem-small", options=OPTS)
     ratio_imps = {}
     for r_ in (RATIOS[:3] if quick else RATIOS):
-        sc = Scenario("gups", "8GiB-hot", machine="pmem-small", threads=4,
-                      fast_slow_ratio=r_)
-        res = tune_scenario("hemem", sc, budget=b, seed=17)
+        study = Study(dataclasses.replace(base, fast_slow_ratio=r_))
+        res = study.tune(budget=b, batch_size=BATCH_SIZE, seed=17)
         label = f"1:{int(r_)}" if r_ >= 1 else f"{int(1 / r_)}:1"
         ratio_imps[label] = res.improvement
-        out["ratios"][label] = {"improvement": res.improvement,
+        out["ratios"][label] = {"spec": study.spec.to_dict(),
+                                "improvement": res.improvement,
                                 "best_config": res.best.config}
         print(f"  ratio={label:5s} {res.improvement:.2f}x", flush=True)
     small = [v for k, v in ratio_imps.items() if k in ("1:16", "1:8")]

@@ -1,19 +1,22 @@
 """Quickstart: tune HeMem's knobs for a workload with SMAC-BO (the paper's
-pipeline, §3.1) and print the before/after table.
+pipeline, §3.1) through the typed Study API, and print the before/after
+table.
 
     PYTHONPATH=src python examples/quickstart.py [--workload gups] [--budget 40]
 
 Pass ``--batch-size 8`` to evaluate whole candidate batches per tuning
-iteration through the vectorized simulator (``run_simulation_batch``), and
-``--workers auto`` to additionally shard each batch over a process pool.
+iteration through the vectorized simulator, and ``--workers auto`` to
+additionally shard each batch over a process pool.  The experiment is fully
+described by one JSON-round-trippable ``ExperimentSpec``; see
+``examples/legacy_quickstart.py`` for the deprecated pre-PR-2 call pattern.
 """
 import argparse
+import json
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.simulator import Scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 from repro.core.knobs import HEMEM_SPACE
-from repro.core.bo.tuner import tune_scenario
 from repro.core.bo.importance import knob_importance
 
 
@@ -31,12 +34,18 @@ def main():
     args = ap.parse_args()
     workers = args.workers if args.workers == "auto" else int(args.workers)
 
-    sc = Scenario(args.workload, args.input, machine=args.machine)
+    spec = ExperimentSpec(
+        engine="hemem",
+        workload=WorkloadSpec(args.workload, args.input),
+        machine=args.machine,
+        options=SimOptions(sampler="sparse" if args.batch_size > 1
+                           else "elementwise", workers=workers))
+    study = Study(spec)
     mode = f"batch q={args.batch_size}" if args.batch_size > 1 else "sequential"
-    print(f"Tuning HeMem for {sc.key} (budget {args.budget}, {mode})...")
-    res = tune_scenario("hemem", sc, budget=args.budget, seed=0,
-                        verbose=True, batch_size=args.batch_size,
-                        workers=workers)
+    print(f"Tuning HeMem for {study.key} (budget {args.budget}, {mode})...")
+    print(f"spec: {json.dumps(spec.to_dict())}\n")
+    res = study.tune(budget=args.budget, batch_size=args.batch_size, seed=0,
+                     verbose=True)
     print(f"\ndefault: {res.default_value:8.1f}s")
     print(f"best:    {res.best_value:8.1f}s   ({res.improvement:.2f}x)")
     print("\nbest config (changes vs default):")

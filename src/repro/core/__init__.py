@@ -1,3 +1,30 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core reproduction package: typed experiment API over the tiering
+simulator, engines, workloads and the SMAC tuner.
+
+Public entry points (PR 2 redesign):
+
+* :class:`~repro.core.study.Study` — ``run()`` / ``tune()`` / ``sweep()``
+* :class:`~repro.core.specs.ExperimentSpec` (+ ``EngineSpec``,
+  ``WorkloadSpec``, ``SimOptions``) — typed, JSON-round-trippable specs
+* :mod:`~repro.core.registry` — ``@register_engine`` / ``@register_workload``
+  / ``register_sampler`` / ``register_backend`` / ``register_machine``
+
+The historical loose-kwargs functions (``evaluate``, ``evaluate_batch``,
+``run_simulation``, ``make_engine``, ``tune_scenario``, ``Scenario``) remain
+as deprecated shims with identical numerics; see the migration table in the
+:mod:`repro.core.study` docstring.
+"""
+
+from .registry import (BACKENDS, ENGINES, MACHINES, SAMPLERS, WORKLOADS,
+                       Registry, register_backend, register_engine,
+                       register_machine, register_sampler, register_workload)
+from .specs import EngineSpec, ExperimentSpec, SimOptions, WorkloadSpec
+from .study import Study, SweepResult
+
+__all__ = [
+    "BACKENDS", "ENGINES", "MACHINES", "SAMPLERS", "WORKLOADS", "Registry",
+    "register_backend", "register_engine", "register_machine",
+    "register_sampler", "register_workload",
+    "EngineSpec", "ExperimentSpec", "SimOptions", "WorkloadSpec",
+    "Study", "SweepResult",
+]

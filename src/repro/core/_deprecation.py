@@ -1,0 +1,19 @@
+"""Shared helper for the legacy entry-point shims (PR 2 API redesign).
+
+Every deprecated callable warns with a message starting with its fully
+qualified ``repro.`` name, so CI can escalate exactly our deprecations to
+errors with ``-W "error:repro.:DeprecationWarning"`` without tripping over
+third-party warnings.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+
+def warn_deprecated(old: str, new: str, stacklevel: int = 3) -> None:
+    """Emit a DeprecationWarning pointing at the typed-API replacement."""
+    warnings.warn(f"{old} is deprecated; use {new} instead "
+                  f"(see repro.core.study module docstring for the "
+                  f"migration table)",
+                  DeprecationWarning, stacklevel=stacklevel)

@@ -124,28 +124,34 @@ def tune_scenario(engine: str, scenario, budget: int = 100, seed: int = 0,
                   batch_size: int = 1, workers: int = 1,
                   sampler: str = "sparse", backend: str = "numpy",
                   ) -> TuningResult:
-    """Convenience wrapper used by benchmarks and examples.
+    """Deprecated wrapper — use ``Study(spec).tune(budget, batch_size)``.
 
     ``batch_size=q > 1`` evaluates each optimizer round with
     :func:`~repro.core.simulator.run_simulation_batch` (``sampler``/
     ``workers``/``backend`` select the vectorized evaluation mode);
     ``batch_size=1`` is the paper-faithful sequential loop.
     """
-    if batch_size > 1:
-        objective_batch = scenario.objective_batch(
-            engine, sampler=sampler, workers=workers, backend=backend)
-    else:
-        objective_batch = None
-        if workers not in (1, None) or sampler != "sparse" \
-                or backend != "numpy":
-            import warnings
-            warnings.warn(
-                "batch_size=1 runs the paper-faithful sequential loop; "
-                "workers/sampler/backend only apply with batch_size > 1",
-                stacklevel=2)
-    session = TuningSession(engine, scenario.objective(engine),
-                            scenario_key=scenario.key, budget=budget,
-                            seed=seed, optimizer=optimizer,
-                            batch_size=batch_size,
-                            objective_batch=objective_batch)
-    return session.run(verbose=verbose)
+    from .._deprecation import warn_deprecated
+    from ..specs import EngineSpec, ExperimentSpec, SimOptions, WorkloadSpec
+    from ..study import Study
+    warn_deprecated("repro.core.bo.tuner.tune_scenario",
+                    "Study(ExperimentSpec(...)).tune(budget, batch_size)")
+    if batch_size <= 1 and (workers not in (1, None) or sampler != "sparse"
+                            or backend != "numpy"):
+        import warnings
+        warnings.warn(
+            "batch_size=1 runs the paper-faithful sequential loop; "
+            "workers/sampler/backend only apply with batch_size > 1",
+            stacklevel=2)
+    if batch_size <= 1:  # the sequential loop always evaluated elementwise
+        sampler, workers, backend = "elementwise", 1, "numpy"
+    spec = ExperimentSpec(
+        engine=EngineSpec(engine),
+        workload=WorkloadSpec(scenario.workload, scenario.input_name,
+                              threads=scenario.threads,
+                              scale=scenario.scale),
+        machine=scenario.machine, fast_slow_ratio=scenario.fast_slow_ratio,
+        options=SimOptions(seed=scenario.seed, sampler=sampler,
+                           workers=workers, backend=backend))
+    return Study(spec).tune(budget=budget, batch_size=batch_size, seed=seed,
+                            optimizer=optimizer, verbose=verbose)

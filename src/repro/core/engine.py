@@ -35,6 +35,10 @@ Two sampling backends are provided (``sampler=``):
   only where the rate is high, plus total-count + inverse-CDF placement for
   the long cold tail.  Cost scales with *sampled events*, not pages, which is
   what makes batched tuning sweeps fast.
+
+Engines and samplers are looked up through :mod:`repro.core.registry`
+(``@register_engine`` / ``register_sampler``), so new policies plug into
+``Study``/``make_batch_engine`` without touching any dispatch code here.
 """
 
 from __future__ import annotations
@@ -45,6 +49,8 @@ import numpy as np
 
 from .pages import (BatchTierState, MigrationPlan, TierState,
                     migration_rate_pages)
+from .registry import (ENGINES as ENGINE_REGISTRY, SAMPLERS, register_engine,
+                       register_sampler)
 
 SeedLike = Union[int, Sequence[int]]
 
@@ -88,6 +94,22 @@ def sparse_poisson(rng: np.random.Generator, base: np.ndarray,
     return out
 
 
+def _elementwise_draw(rng: np.random.Generator, base: np.ndarray,
+                      period: float) -> np.ndarray:
+    """Per-page Poisson draws — bit-identical to the historical sampler."""
+    return rng.poisson(base / period).astype(np.float64)
+
+
+def _sparse_draw(rng: np.random.Generator, base: np.ndarray,
+                 period: float) -> np.ndarray:
+    """Exact-distribution event-driven sampler (see :func:`sparse_poisson`)."""
+    return sparse_poisson(rng, base, 1.0 / period)
+
+
+register_sampler("elementwise", _elementwise_draw)
+register_sampler("sparse", _sparse_draw)
+
+
 def _as_vec(value, batch: int, dtype=np.float64) -> np.ndarray:
     arr = np.asarray(value, dtype=dtype)
     if arr.ndim == 0:
@@ -113,8 +135,7 @@ class BatchTieringEngine:
         self.batch = len(self.configs)
         assert self.batch == btier.batch, "one config per tier-state row"
         self.btier = btier
-        if sampler not in ("elementwise", "sparse"):
-            raise ValueError(f"unknown sampler {sampler!r}")
+        self._draw = SAMPLERS.get(sampler)
         self.sampler = sampler
         if np.ndim(seeds) == 0:
             seeds = [int(seeds)] * self.batch
@@ -143,6 +164,7 @@ class BatchTieringEngine:
 # ---------------------------------------------------------------------------
 # HeMem — faithful to §3.2 + Table 2.
 # ---------------------------------------------------------------------------
+@register_engine("hemem")
 class BatchHeMemEngine(BatchTieringEngine):
     #: normalization of the cooling trigger: one trigger fires per
     #: ``cooling_threshold * n_pages / COOL_UNIT_PAGES`` sampled accesses
@@ -182,20 +204,10 @@ class BatchHeMemEngine(BatchTieringEngine):
             self._sr = np.empty((B, n))
             self._sw = np.empty((B, n))
         sr, sw = self._sr, self._sw
-        if self.sampler == "elementwise":
-            for b in range(B):
-                rng = self.rngs[b]
-                sr[b] = rng.poisson(reads / self.sampling_period[b]).astype(
-                    np.float64)
-                sw[b] = rng.poisson(
-                    writes / self.write_sampling_period[b]).astype(np.float64)
-        else:
-            for b in range(B):
-                rng = self.rngs[b]
-                sr[b] = sparse_poisson(rng, reads,
-                                       1.0 / self.sampling_period[b])
-                sw[b] = sparse_poisson(rng, writes,
-                                       1.0 / self.write_sampling_period[b])
+        for b in range(B):
+            rng = self.rngs[b]
+            sr[b] = self._draw(rng, reads, self.sampling_period[b])
+            sw[b] = self._draw(rng, writes, self.write_sampling_period[b])
         self.samples_last_epoch = sr.sum(axis=1) + sw.sum(axis=1)
         # cooling is checked while samples are processed (not by the
         # migration thread): every `cooling_threshold` worth of sampled
@@ -320,10 +332,18 @@ class BatchHeMemEngine(BatchTieringEngine):
 # ---------------------------------------------------------------------------
 # HMSDK / DAMON — region-based monitor (§4.5).
 # ---------------------------------------------------------------------------
+@register_engine("hmsdk")
 class BatchHMSDKEngine(BatchTieringEngine):
     def __init__(self, configs, btier, seeds: SeedLike = 0,
                  sampler: str = "elementwise"):
         super().__init__(configs, btier, seeds, sampler)
+        if sampler not in ("elementwise", "sparse"):
+            # DAMON probes are region-Bernoulli draws, not the per-page
+            # Poisson protocol custom samplers implement; reject rather than
+            # silently ignoring the registered sampler
+            raise ValueError(
+                f"hmsdk supports only the builtin 'elementwise'/'sparse' "
+                f"samplers, not {sampler!r}")
         B, n = self.batch, btier.n_pages
         self.nr_regions = np.minimum(self._knob("nr_regions", dtype=np.int64),
                                      n)
@@ -469,6 +489,7 @@ class BatchHMSDKEngine(BatchTieringEngine):
 # ---------------------------------------------------------------------------
 # Memtis — dynamic hot threshold, static everything else (§4.6).
 # ---------------------------------------------------------------------------
+@register_engine("memtis")
 class BatchMemtisEngine(BatchTieringEngine):
     #: extra kernel time charged per migrated page (ms) — the paper observes
     #: Memtis "spends a significant amount of time in the kernel for page
@@ -500,20 +521,10 @@ class BatchMemtisEngine(BatchTieringEngine):
             self._sr = np.empty((B, n))
             self._sw = np.empty((B, n))
         sr, sw = self._sr, self._sw
-        if self.sampler == "elementwise":
-            for b in range(B):
-                rng = self.rngs[b]
-                sr[b] = rng.poisson(reads / self.sampling_period[b]).astype(
-                    np.float64)
-                sw[b] = rng.poisson(
-                    writes / self.write_sampling_period[b]).astype(np.float64)
-        else:
-            for b in range(B):
-                rng = self.rngs[b]
-                sr[b] = sparse_poisson(rng, reads,
-                                       1.0 / self.sampling_period[b])
-                sw[b] = sparse_poisson(rng, writes,
-                                       1.0 / self.write_sampling_period[b])
+        for b in range(B):
+            rng = self.rngs[b]
+            sr[b] = self._draw(rng, reads, self.sampling_period[b])
+            sw[b] = self._draw(rng, writes, self.write_sampling_period[b])
         self.read_counts += sr
         self.write_counts += sw
         self.samples_last_epoch = sr.sum(axis=1) + sw.sum(axis=1)
@@ -599,6 +610,7 @@ class BatchMemtisEngine(BatchTieringEngine):
 # ---------------------------------------------------------------------------
 # Reference points.
 # ---------------------------------------------------------------------------
+@register_engine("static")
 class BatchStaticEngine(BatchTieringEngine):
     """First-touch placement, never migrates."""
 
@@ -609,6 +621,7 @@ class BatchStaticEngine(BatchTieringEngine):
         return [MigrationPlan.empty() for _ in range(self.batch)]
 
 
+@register_engine("oracle")
 class BatchOracleEngine(BatchTieringEngine):
     """Clairvoyant top-capacity placement with free migrations (CH_opt
     bound)."""
@@ -653,22 +666,17 @@ class BatchOracleEngine(BatchTieringEngine):
         return plans
 
 
-BATCH_ENGINES = {
-    "hemem": BatchHeMemEngine,
-    "hmsdk": BatchHMSDKEngine,
-    "memtis": BatchMemtisEngine,
-    "static": BatchStaticEngine,
-    "oracle": BatchOracleEngine,
-}
+#: legacy alias — the engine registry replaced this hardcoded map (PR 2).
+#: Mostly dict-compatible, except bare ``.get(name)`` raises KeyError with a
+#: did-you-mean hint; pass a default (``.get(name, None)``) for dict behavior.
+BATCH_ENGINES = ENGINE_REGISTRY
 
 
 def make_batch_engine(name: str, configs: Sequence[Mapping[str, Any]],
                       btier: BatchTierState, seeds: SeedLike = 0,
                       sampler: str = "elementwise") -> BatchTieringEngine:
-    try:
-        cls = BATCH_ENGINES[name]
-    except KeyError:
-        raise KeyError(f"unknown engine {name!r}; have {sorted(BATCH_ENGINES)}")
+    """Instantiate the registered batch engine ``name`` (registry-resolved)."""
+    cls = ENGINE_REGISTRY.get(name)
     return cls(configs, btier, seeds=seeds, sampler=sampler)
 
 
@@ -776,7 +784,12 @@ class OracleEngine(TieringEngine):
     zero_cost_migrations = True
 
 
-ENGINES = {
+#: single-config (B=1) wrapper classes for the builtin engines; engines
+#: registered only through :func:`~repro.core.registry.register_engine` get
+#: an auto-generated wrapper from :func:`single_engine_cls`.  (Renamed from
+#: the historical module-level ``ENGINES`` dict, which collided with the
+#: batch-class registry of the same name in :mod:`repro.core.registry`.)
+SINGLE_ENGINES = {
     "hemem": HeMemEngine,
     "hmsdk": HMSDKEngine,
     "memtis": MemtisEngine,
@@ -785,10 +798,26 @@ ENGINES = {
 }
 
 
+def single_engine_cls(name: str) -> type:
+    """The ``B=1`` wrapper class for engine ``name`` (auto-generated for
+    engines that registered only a batch class).  The registry is the
+    source of truth: re-registering a name invalidates the cached wrapper,
+    so the single-config path can never diverge from the batch path."""
+    batch_cls = ENGINE_REGISTRY.get(name)
+    cls = SINGLE_ENGINES.get(name)
+    if cls is None or cls.batch_cls is not batch_cls:
+        cls = type(f"Single{batch_cls.__name__}", (TieringEngine,), {
+            "batch_cls": batch_cls,
+            "zero_cost_migrations": batch_cls.zero_cost_migrations,
+        })
+        SINGLE_ENGINES[name] = cls
+    return cls
+
+
 def make_engine(name: str, config: Mapping[str, Any], tier: TierState,
                 seed: int = 0, sampler: str = "elementwise") -> TieringEngine:
-    try:
-        cls = ENGINES[name]
-    except KeyError:
-        raise KeyError(f"unknown engine {name!r}; have {sorted(ENGINES)}")
-    return cls(config, tier, seed=seed, sampler=sampler)
+    """Deprecated single-config factory; resolves through the registry."""
+    from ._deprecation import warn_deprecated
+    warn_deprecated("repro.core.engine.make_engine",
+                    "repro.core.registry.ENGINES / Study(spec).run()")
+    return single_engine_cls(name)(config, tier, seed=seed, sampler=sampler)

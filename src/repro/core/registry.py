@@ -1,0 +1,214 @@
+"""Component registries: the extension seam of the typed experiment API.
+
+Engines, workloads, samplers, simulation backends and machine profiles all
+register themselves here by name; every dispatch site (``make_batch_engine``,
+``make_workload``, the simulator's backend/machine lookup) resolves through a
+:class:`Registry` instead of a hardcoded ``dict``/``if-elif`` chain.  Unknown
+names raise ``KeyError`` with a did-you-mean suggestion and the full list of
+registered names.  Registering a new component never requires touching core
+dispatch code:
+
+    from repro.core.registry import register_engine
+
+    @register_engine("my-policy", space=MY_KNOB_SPACE)
+    class BatchMyPolicyEngine(BatchTieringEngine):
+        ...
+
+    Study(ExperimentSpec(engine="my-policy", workload="gups")).run()
+
+Migration table (old call -> new call):
+
+=====================================================  =========================================
+old                                                    new
+=====================================================  =========================================
+``engine.BATCH_ENGINES[name]``                         ``registry.ENGINES.get(name)``
+``engine.make_engine(name, cfg, tier)``                ``registry.ENGINES`` + ``TieringEngine``
+                                                       wrapper (or keep ``make_engine``; it now
+                                                       resolves through the registry)
+``workloads._BUILDERS[name]``                          ``registry.WORKLOADS.get(name)``
+``simulator.MACHINES[name]``                           ``registry.MACHINES.get(name)``
+hardcoded ``sampler in ("elementwise", "sparse")``     ``registry.SAMPLERS.get(name)``
+hardcoded ``backend in ("numpy", "jax")``              ``registry.BACKENDS.get(name)``
+=====================================================  =========================================
+
+Builtin components are registered when their defining module is imported
+(``repro.core.engine``, ``repro.core.workloads``, ``repro.core.simulator``);
+importing ``repro.core`` (or ``repro.core.specs``) pulls all of them in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import (Any, Callable, Dict, Generic, Iterator, List, Optional,
+                    Tuple, TypeVar)
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    """A named component table with decorator registration and fuzzy errors."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, T] = {}
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str, obj: Optional[T] = None, *,
+                 overwrite: bool = False):
+        """Register ``obj`` under ``name``; usable as a decorator.
+
+        ``registry.register("foo", thing)`` registers directly;
+        ``@registry.register("foo")`` registers the decorated object.
+        Duplicate names raise unless ``overwrite=True``.
+        """
+        if not isinstance(name, str) or not name:
+            raise TypeError(f"{self.kind} name must be a non-empty string, "
+                            f"got {name!r}")
+
+        def _add(o: T) -> T:
+            if name in self._entries and not overwrite:
+                raise ValueError(
+                    f"{self.kind} {name!r} is already registered "
+                    f"(to {self._entries[name]!r}); pass overwrite=True "
+                    f"to replace it")
+            self._entries[name] = o
+            return o
+
+        return _add if obj is None else _add(obj)
+
+    def unregister(self, name: str) -> None:
+        """Remove ``name`` (KeyError with suggestions if absent).  Mainly
+        for tests that register throwaway components."""
+        if name not in self._entries:
+            raise KeyError(self.unknown_message(name))
+        del self._entries[name]
+
+    _MISSING = object()
+
+    # -- lookup ------------------------------------------------------------
+    def get(self, name: str, default: Any = _MISSING) -> T:
+        """Resolve ``name``.  Unlike ``dict.get``, a bare ``get(name)``
+        RAISES ``KeyError`` (with a did-you-mean hint) on unknown names —
+        pass an explicit ``default`` for dict-style fallback."""
+        try:
+            return self._entries[name]
+        except (KeyError, TypeError):
+            if default is not Registry._MISSING:
+                return default
+            raise KeyError(self.unknown_message(name)) from None
+
+    def unknown_message(self, name: Any) -> str:
+        close = difflib.get_close_matches(str(name), list(self._entries),
+                                          n=1, cutoff=0.5)
+        hint = f"; did you mean {close[0]!r}?" if close else ""
+        have = ", ".join(sorted(self._entries)) or "<none>"
+        return f"unknown {self.kind} {name!r}{hint} (registered: {have})"
+
+    # -- dict-like views ---------------------------------------------------
+    def names(self) -> List[str]:
+        return sorted(self._entries)
+
+    def items(self) -> List[Tuple[str, T]]:
+        return sorted(self._entries.items())
+
+    def values(self) -> List[T]:
+        return [v for _, v in self.items()]
+
+    def keys(self) -> List[str]:
+        return self.names()
+
+    def __getitem__(self, name: str) -> T:
+        return self.get(name)
+
+    def __setitem__(self, name: str, obj: T) -> None:
+        """Dict-style assignment == ``register(..., overwrite=True)`` (kept
+        for legacy callers that mutated the old module-level dicts)."""
+        self.register(name, obj, overwrite=True)
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, {self.names()})"
+
+
+# ---------------------------------------------------------------------------
+# The registries.  Values:
+#   ENGINES   — BatchTieringEngine subclasses (batched protocol classes)
+#   WORKLOADS — WorkloadBuilder wrappers around builder functions
+#   SAMPLERS  — draw(rng, base_counts, period) -> sampled per-page counts
+#   BACKENDS  — zero-arg factory returning the vectorized access-cost callable
+#   MACHINES  — Machine profiles (paper Table 3 et al.)
+# ---------------------------------------------------------------------------
+ENGINES: Registry[type] = Registry("engine")
+WORKLOADS: "Registry[WorkloadBuilder]" = Registry("workload")
+SAMPLERS: Registry[Callable[..., Any]] = Registry("sampler")
+BACKENDS: Registry[Callable[[], Callable[..., Any]]] = Registry("backend")
+MACHINES: Registry[Any] = Registry("machine")
+
+
+def register_engine(name: str, *, space: Any = None, overwrite: bool = False):
+    """Class decorator registering a batched tiering engine under ``name``.
+
+    ``space`` optionally registers the engine's :class:`~repro.core.knobs.
+    KnobSpace` so ``get_space(name)`` / ``Study.tune()`` work for it.
+    """
+    def deco(batch_cls: type) -> type:
+        ENGINES.register(name, batch_cls, overwrite=overwrite)
+        if space is not None:
+            from .knobs import SPACES
+            SPACES[name] = space
+        return batch_cls
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadBuilder:
+    """A registered workload builder plus its default input name."""
+
+    name: str
+    builder: Callable[..., Any]     # (input_name, threads, scale, seed)
+    default_input: str = ""
+
+    def __call__(self, input_name: str, threads: int, scale: float,
+                 seed: int):
+        # no per-field defaults here: make_workload owns them (single source)
+        return self.builder(input_name or self.default_input, threads, scale,
+                            seed)
+
+
+def register_workload(name: str, *, default_input: str = "",
+                      overwrite: bool = False):
+    """Decorator registering a workload builder ``(input, threads, scale,
+    seed) -> Workload`` under ``name``."""
+    def deco(builder: Callable[..., Any]) -> Callable[..., Any]:
+        WORKLOADS.register(name, WorkloadBuilder(name, builder, default_input),
+                           overwrite=overwrite)
+        return builder
+    return deco
+
+
+def register_sampler(name: str, fn: Optional[Callable[..., Any]] = None, *,
+                     overwrite: bool = False):
+    """Register a monitoring sampler ``draw(rng, base, period) -> counts``."""
+    return SAMPLERS.register(name, fn, overwrite=overwrite)
+
+
+def register_backend(name: str, factory: Optional[Callable[[], Any]] = None,
+                     *, overwrite: bool = False):
+    """Register an access-cost backend: a zero-arg factory returning the
+    vectorized cost callable used by the simulator epoch loop."""
+    return BACKENDS.register(name, factory, overwrite=overwrite)
+
+
+def register_machine(machine: Any, *, overwrite: bool = False):
+    """Register a :class:`~repro.core.simulator.Machine` profile by name."""
+    MACHINES.register(machine.name, machine, overwrite=overwrite)
+    return machine

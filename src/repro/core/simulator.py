@@ -40,14 +40,18 @@ engine is instantiated; see :func:`scale_config`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
+from ._deprecation import warn_deprecated
 from .engine import make_batch_engine
 from .knobs import get_space
 from .pages import BatchTierState, PAGE_BYTES, migration_rate_pages
+from .registry import (BACKENDS, MACHINES as MACHINE_REGISTRY,
+                       register_backend, register_machine)
 from .workloads import Workload, make_workload
 
 CACHELINE = 64
@@ -95,15 +99,30 @@ TPU_V5E_HOST = Machine("tpu-v5e-host", cores=1, near_bw_gbs=819.0,
                        near_lat_ns=600.0, far_lat_ns=2500.0,
                        sample_us=0.05, scan_us=0.05, default_threads=1)
 
-MACHINES: Dict[str, Machine] = {m.name: m for m in
-                                (PMEM_LARGE, PMEM_SMALL, NUMA, TPU_V5E_HOST)}
+for _m in (PMEM_LARGE, PMEM_SMALL, NUMA, TPU_V5E_HOST):
+    register_machine(_m)
+
+#: machine profiles by name — now the shared registry (dict-like view)
+MACHINES = MACHINE_REGISTRY
 
 
 def get_machine(name: str) -> Machine:
-    try:
-        return MACHINES[name]
-    except KeyError:
-        raise KeyError(f"unknown machine {name!r}; have {sorted(MACHINES)}")
+    """Look up a registered machine profile (did-you-mean on unknown names)."""
+    return MACHINE_REGISTRY.get(name)
+
+
+def _as_machine(machine: "Machine | str") -> Machine:
+    """Resolve a machine argument; ad-hoc Machine instances are registered on
+    first use so specs referencing them by name stay replayable.  Reusing a
+    registered name for a *different* profile keeps the instance for the
+    current call but does NOT re-register it — replay-by-name resolves to
+    the first profile; use ``register_machine(..., overwrite=True)`` (or a
+    fresh name) to make a new profile the replay target."""
+    if isinstance(machine, str):
+        return get_machine(machine)
+    if machine.name not in MACHINE_REGISTRY:
+        register_machine(machine)
+    return machine
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +234,16 @@ def _jax_cost_fn():
     return _JAX_COST
 
 
+def _numpy_cost_fn():
+    return functools.partial(_access_cost, np)
+
+
+# backends are zero-arg factories returning the vectorized cost callable;
+# the numpy path broadcasts, the jax path jit+vmaps the same scalar math
+register_backend("numpy", _numpy_cost_fn)
+register_backend("jax", _jax_cost_fn)
+
+
 # ---------------------------------------------------------------------------
 # Core loop (batched)
 # ---------------------------------------------------------------------------
@@ -279,9 +308,7 @@ def _run_batch_local(workload: Workload, engine_name: str,
     w_mig = np.zeros(B)
     n_promote = np.zeros(B)
     n_demote = np.zeros(B)
-    cost_fn = _jax_cost_fn() if backend == "jax" else None
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}")
+    cost_fn = BACKENDS.get(backend)()
 
     for e in range(n_epochs):
         reads, writes = workload.epoch_access(e)
@@ -322,16 +349,10 @@ def _run_batch_local(workload: Workload, engine_name: str,
             promote_bytes = n_promote * page_bytes
             demote_bytes = n_demote * page_bytes
 
-        wall_ms, stall_s, sampling_s, hr = (
-            cost_fn(acc_f, acc_s, reads_s, writes_s, promote_bytes,
-                    demote_bytes, w_mig, est_wall_ms,
-                    engine.samples_last_epoch,
-                    engine.overhead_ms_last_epoch, const)
-            if cost_fn is not None else
-            _access_cost(np, acc_f, acc_s, reads_s, writes_s, promote_bytes,
-                         demote_bytes, w_mig, est_wall_ms,
-                         engine.samples_last_epoch,
-                         engine.overhead_ms_last_epoch, const))
+        wall_ms, stall_s, sampling_s, hr = cost_fn(
+            acc_f, acc_s, reads_s, writes_s, promote_bytes, demote_bytes,
+            w_mig, est_wall_ms, engine.samples_last_epoch,
+            engine.overhead_ms_last_epoch, const)
         wall[e] = wall_ms
         est_wall_ms = np.asarray(wall_ms, dtype=np.float64)
         hit_rate[e] = hr
@@ -388,8 +409,21 @@ def _get_pool(workers: int):
 
 
 def _shard_worker(args):
-    (wl_spec, engine_name, configs, machine, fast_slow_ratio, seeds, sampler,
-     record_heatmap, heat_bins, fast_capacity_pages, backend) = args
+    (wl_spec, components, engine_name, configs, machine, fast_slow_ratio,
+     seeds, sampler, record_heatmap, heat_bins, fast_capacity_pages,
+     backend) = args
+    # spawn-context workers start from a fresh interpreter that only imported
+    # this module, so components registered (or overridden) by user code are
+    # unknown there; the parent's resolved objects shipped in the payload are
+    # authoritative — register them unconditionally so the worker dispatches
+    # to exactly what the parent resolved
+    from .registry import BACKENDS as _B, ENGINES as _E, SAMPLERS as _S, \
+        WORKLOADS as _W
+    for reg, name, obj in ((_E, engine_name, components[0]),
+                           (_W, wl_spec[0], components[1]),
+                           (_S, sampler, components[2]),
+                           (_B, backend, components[3])):
+        reg.register(name, obj, overwrite=True)
     wl = make_workload(*wl_spec)
     return _run_batch_local(wl, engine_name, configs, machine,
                             fast_slow_ratio, seeds, sampler, record_heatmap,
@@ -426,8 +460,7 @@ def run_simulation_batch(workload: Workload, engine_name: str,
     (or ``"auto"``) shards the batch over a persistent process pool;
     sharding never changes results, only wall time.
     """
-    if isinstance(machine, str):
-        machine = get_machine(machine)
+    machine = _as_machine(machine)
     configs = [dict(c) for c in configs]
     B = len(configs)
     if B == 0:
@@ -445,6 +478,12 @@ def run_simulation_batch(workload: Workload, engine_name: str,
                                 fast_capacity_pages, backend)
     wl_spec = (workload.name, workload.input_name, workload.threads,
                workload.scale, workload.seed)
+    # resolved components travel with the shard so spawn-start workers can
+    # serve names registered outside this module (see _shard_worker)
+    from .registry import ENGINES as _ENGINES, SAMPLERS as _SAMPLERS, \
+        WORKLOADS as _WORKLOADS
+    components = (_ENGINES.get(engine_name), _WORKLOADS.get(workload.name),
+                  _SAMPLERS.get(sampler), BACKENDS.get(backend))
     bounds = np.linspace(0, B, workers + 1).astype(int)
     pool = _get_pool(workers)
     futures = []
@@ -453,9 +492,9 @@ def run_simulation_batch(workload: Workload, engine_name: str,
         if lo == hi:
             continue
         futures.append(pool.submit(_shard_worker, (
-            wl_spec, engine_name, configs[lo:hi], machine, fast_slow_ratio,
-            seeds[lo:hi], sampler, record_heatmap, heat_bins,
-            fast_capacity_pages, backend)))
+            wl_spec, components, engine_name, configs[lo:hi], machine,
+            fast_slow_ratio, seeds[lo:hi], sampler, record_heatmap,
+            heat_bins, fast_capacity_pages, backend)))
     out: List[SimResult] = []
     for f in futures:
         out.extend(f.result())
@@ -471,14 +510,15 @@ def run_simulation(workload: Workload, engine_name: str,
                    heat_bins: int = 128,
                    fast_capacity_pages: Optional[int] = None,
                    sampler: str = "elementwise") -> SimResult:
-    """Simulate ``workload`` under ``engine_name``/``config`` on ``machine``.
+    """Deprecated ``B=1`` wrapper over :func:`run_simulation_batch`.
 
-    Thin ``B=1`` wrapper over :func:`run_simulation_batch` kept for existing
-    callers.  ``fast_slow_ratio`` r sets fast-tier capacity = RSS/(1+r) (the
+    Use :class:`repro.core.study.Study` (``Study(spec).run()``) instead.
+    ``fast_slow_ratio`` r sets fast-tier capacity = RSS/(1+r) (the
     paper's "1:r memory size ratio"; default 1:8, §4.1).
     """
-    if isinstance(machine, str):
-        machine = get_machine(machine)
+    warn_deprecated("repro.core.simulator.run_simulation",
+                    "Study(ExperimentSpec(...)).run()")
+    machine = _as_machine(machine)
     if config is None:
         config = get_space(engine_name).default_config() \
             if engine_name in ("hemem", "hmsdk", "memtis") else {}
@@ -488,23 +528,45 @@ def run_simulation(workload: Workload, engine_name: str,
 
 
 # ---------------------------------------------------------------------------
-# f(θ) for the tuner
+# f(θ) for the tuner — deprecated shims over the typed Study API.
 # ---------------------------------------------------------------------------
+def _legacy_study(engine_name: str, workload_name: str, input_name: str,
+                  machine: "Machine | str", threads: Optional[int],
+                  scale: float, fast_slow_ratio: float, seed: int,
+                  sampler: str, workers="auto-off", backend: str = "numpy"):
+    """Build the Study equivalent of the historical loose-kwargs call."""
+    from .specs import EngineSpec, ExperimentSpec, SimOptions, WorkloadSpec
+    from .study import Study
+    machine = _as_machine(machine)
+    spec = ExperimentSpec(
+        engine=EngineSpec(engine_name),
+        workload=WorkloadSpec(workload_name, input_name, threads=threads,
+                              scale=scale),
+        machine=machine.name, fast_slow_ratio=fast_slow_ratio,
+        options=SimOptions(seed=seed, sampler=sampler,
+                           workers=1 if workers == "auto-off" else workers,
+                           backend=backend))
+    # pass the resolved Machine through: an ad-hoc instance whose name
+    # collides with a registered profile must win, as it did pre-shim
+    return Study(spec, machine=machine)
+
+
 def evaluate(engine_name: str, config: Mapping[str, Any], workload_name: str,
              input_name: str = "", machine: Machine | str = PMEM_LARGE,
              threads: Optional[int] = None, scale: float = 0.25,
              fast_slow_ratio: float = 8.0, seed: int = 0,
              sampler: str = "elementwise") -> float:
-    """Execution time (seconds) of one workload run — the objective of §3."""
-    if isinstance(machine, str):
-        machine = get_machine(machine)
-    t = threads if threads is not None else machine.default_threads
-    wl = make_workload(workload_name, input_name, threads=t, scale=scale,
-                       seed=seed)
-    res = run_simulation(wl, engine_name, config, machine,
-                         fast_slow_ratio=fast_slow_ratio, seed=seed,
-                         sampler=sampler)
-    return res.total_s
+    """Execution time (seconds) of one workload run — the objective of §3.
+
+    Deprecated: use ``Study(ExperimentSpec(...)).run().total_s``.
+    """
+    warn_deprecated("repro.core.simulator.evaluate",
+                    "Study(ExperimentSpec(...)).run().total_s")
+    study = _legacy_study(engine_name, workload_name, input_name, machine,
+                          threads, scale, fast_slow_ratio, seed, sampler)
+    if config is None:
+        return study.run().total_s
+    return study.run(configs=[config])[0].total_s
 
 
 def evaluate_batch(engine_name: str, configs: Sequence[Mapping[str, Any]],
@@ -514,22 +576,26 @@ def evaluate_batch(engine_name: str, configs: Sequence[Mapping[str, Any]],
                    fast_slow_ratio: float = 8.0, seed: int = 0,
                    sampler: str = "sparse", workers: int = 1,
                    backend: str = "numpy") -> List[float]:
-    """Batched objective: execution times of all B candidate configs."""
-    if isinstance(machine, str):
-        machine = get_machine(machine)
-    t = threads if threads is not None else machine.default_threads
-    wl = make_workload(workload_name, input_name, threads=t, scale=scale,
-                       seed=seed)
-    results = run_simulation_batch(wl, engine_name, configs, machine,
-                                   fast_slow_ratio=fast_slow_ratio,
-                                   seeds=seed, sampler=sampler,
-                                   workers=workers, backend=backend)
-    return [r.total_s for r in results]
+    """Batched objective: execution times of all B candidate configs.
+
+    Deprecated: use ``Study(ExperimentSpec(...)).run(configs=...)``.
+    """
+    warn_deprecated("repro.core.simulator.evaluate_batch",
+                    "Study(ExperimentSpec(...)).run(configs=...)")
+    study = _legacy_study(engine_name, workload_name, input_name, machine,
+                          threads, scale, fast_slow_ratio, seed, sampler,
+                          workers=workers, backend=backend)
+    return [r.total_s for r in study.run(configs=configs)]
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A fully-specified tuning target: workload × input × machine × setting."""
+    """A fully-specified tuning target: workload × input × machine × setting.
+
+    Deprecated: :class:`repro.core.specs.ExperimentSpec` composes the same
+    information as typed sub-specs (plus a :class:`~repro.core.specs.
+    SimOptions` for evaluation-mode options) and round-trips through JSON.
+    """
     workload: str
     input_name: str = ""
     machine: str = "pmem-large"
@@ -538,21 +604,31 @@ class Scenario:
     fast_slow_ratio: float = 8.0
     seed: int = 0
 
+    def __post_init__(self):
+        warn_deprecated("repro.core.simulator.Scenario",
+                        "repro.core.specs.ExperimentSpec", stacklevel=4)
+
+    def _study(self, engine_name: str, sampler: str = "elementwise",
+               workers: int = 1, backend: str = "numpy"):
+        return _legacy_study(engine_name, self.workload, self.input_name,
+                             self.machine, self.threads, self.scale,
+                             self.fast_slow_ratio, self.seed, sampler,
+                             workers=workers, backend=backend)
+
     def objective(self, engine_name: str):
+        study = self._study(engine_name)
+
         def f(config: Mapping[str, Any]) -> float:
-            return evaluate(engine_name, config, self.workload,
-                            self.input_name, self.machine, self.threads,
-                            self.scale, self.fast_slow_ratio, self.seed)
+            return study.run(configs=[config])[0].total_s
         return f
 
     def objective_batch(self, engine_name: str, sampler: str = "sparse",
                         workers: int = 1, backend: str = "numpy"):
+        study = self._study(engine_name, sampler=sampler, workers=workers,
+                            backend=backend)
+
         def f(configs: Sequence[Mapping[str, Any]]) -> List[float]:
-            return evaluate_batch(engine_name, configs, self.workload,
-                                  self.input_name, self.machine, self.threads,
-                                  self.scale, self.fast_slow_ratio, self.seed,
-                                  sampler=sampler, workers=workers,
-                                  backend=backend)
+            return [r.total_s for r in study.run(configs=configs)]
         return f
 
     @property

@@ -1,0 +1,202 @@
+"""Typed experiment specs: the JSON-serializable contract of the Study API.
+
+The paper's premise is evaluating *many* (engine, workload, machine,
+knob-config) combinations through one objective.  Historically each entry
+point re-spelled that combination as loose strings and scattered kwargs;
+these frozen dataclasses put every axis in ONE typed, validated place:
+
+* :class:`EngineSpec` — engine name (registry-validated) + knob config
+  (validated/completed against the engine's :class:`~repro.core.knobs.
+  KnobSpace` when one is registered);
+* :class:`WorkloadSpec` — workload name (registry-validated) + input,
+  thread count and simulation scale;
+* :class:`SimOptions` — *how* to evaluate: seed, sampler, workers, backend
+  and heatmap recording, in one place instead of four call signatures;
+* :class:`ExperimentSpec` — the composition, plus machine name and
+  fast:slow ratio.
+
+All four round-trip through plain JSON dicts (``to_dict``/``from_dict``), so
+results saved under ``benchmarks/results/`` embed replayable specs::
+
+    spec = ExperimentSpec.from_dict(json.load(f)["spec"])
+    Study(spec).run()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Union
+
+# importing these modules registers the builtin engines, workloads, samplers,
+# backends and machines the validators below resolve against
+from . import engine as _engine_mod      # noqa: F401
+from . import simulator as _sim_mod      # noqa: F401
+from . import workloads as _workloads_mod  # noqa: F401
+from .knobs import SPACES
+from .registry import BACKENDS, ENGINES, MACHINES, SAMPLERS, WORKLOADS
+
+
+def _freeze(obj, field: str, value) -> None:
+    object.__setattr__(obj, field, value)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """A tiering engine plus a fully validated knob configuration.
+
+    ``config=None`` resolves to the engine's default config (empty for
+    engines without a registered knob space); a partial config is completed
+    with defaults and clipped into the knob domain.
+    """
+
+    name: str
+    config: Optional[Dict[str, Any]] = None
+
+    def __post_init__(self):
+        ENGINES.get(self.name)  # raises with did-you-mean on unknown names
+        space = SPACES.get(self.name)
+        if space is None:
+            cfg = dict(self.config or {})
+        elif self.config is None:
+            cfg = space.default_config()
+        else:
+            cfg = space.validate(self.config)
+        _freeze(self, "config", cfg)
+
+    def __hash__(self):
+        # the dataclass-generated hash would crash on the config dict;
+        # hashability lets frozen specs serve as cache/dict keys
+        return hash((self.name, tuple(sorted(self.config.items()))))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "config": dict(self.config)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "EngineSpec":
+        return cls(name=d["name"], config=d.get("config"))
+
+    @classmethod
+    def coerce(cls, value: "EngineSpec | str | Mapping[str, Any]") -> "EngineSpec":
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls(value)
+        return cls.from_dict(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """A workload build request: name × input × threads × simulation scale.
+
+    ``threads=None`` defers to the machine profile's default thread count
+    (resolved by :class:`~repro.core.study.Study`).
+    """
+
+    name: str
+    input_name: str = ""
+    threads: Optional[int] = None
+    scale: float = 0.25
+
+    def __post_init__(self):
+        WORKLOADS.get(self.name)
+        if not (0.0 < self.scale <= 1.0):
+            raise ValueError(f"scale must be in (0, 1], got {self.scale}")
+
+    @property
+    def key(self) -> str:
+        inp = f":{self.input_name}" if self.input_name else ""
+        return f"{self.name}{inp}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "WorkloadSpec":
+        return cls(**dict(d))
+
+    @classmethod
+    def coerce(cls, value: "WorkloadSpec | str | Mapping[str, Any]") -> "WorkloadSpec":
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls(value)
+        return cls.from_dict(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOptions:
+    """How to evaluate: every evaluation-mode option in ONE place.
+
+    Replaces the sampler/workers/backend/seed kwargs that were previously
+    scattered across four signatures (``evaluate``, ``evaluate_batch``,
+    ``run_simulation``, ``tune_scenario``).  ``workers`` accepts an int or
+    ``"auto"`` (process pool sized to the CPU count).
+    """
+
+    seed: int = 0
+    sampler: str = "elementwise"
+    workers: Union[int, str] = 1
+    backend: str = "numpy"
+    record_heatmap: bool = False
+    heat_bins: int = 128
+
+    def __post_init__(self):
+        SAMPLERS.get(self.sampler)
+        BACKENDS.get(self.backend)
+        if self.workers not in ("auto", None) and int(self.workers) < 0:
+            raise ValueError(f"workers must be >= 0, got {self.workers!r}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SimOptions":
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One fully-specified experiment: engine × workload × machine × options.
+
+    ``engine``/``workload`` accept bare name strings as a shorthand and are
+    coerced to their typed specs; ``machine`` is a registered machine name.
+    """
+
+    engine: Union[EngineSpec, str]
+    workload: Union[WorkloadSpec, str]
+    machine: str = "pmem-large"
+    fast_slow_ratio: float = 8.0
+    fast_capacity_pages: Optional[int] = None
+    options: SimOptions = dataclasses.field(default_factory=SimOptions)
+
+    def __post_init__(self):
+        _freeze(self, "engine", EngineSpec.coerce(self.engine))
+        _freeze(self, "workload", WorkloadSpec.coerce(self.workload))
+        MACHINES.get(self.machine)
+        if isinstance(self.options, Mapping):
+            _freeze(self, "options", SimOptions.from_dict(self.options))
+
+    @property
+    def key(self) -> str:
+        return f"{self.engine.name}/{self.workload.key}@{self.machine}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "engine": self.engine.to_dict(),
+            "workload": self.workload.to_dict(),
+            "machine": self.machine,
+            "fast_slow_ratio": self.fast_slow_ratio,
+            "fast_capacity_pages": self.fast_capacity_pages,
+            "options": self.options.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return cls(
+            engine=EngineSpec.from_dict(d["engine"]),
+            workload=WorkloadSpec.from_dict(d["workload"]),
+            machine=d.get("machine", "pmem-large"),
+            fast_slow_ratio=d.get("fast_slow_ratio", 8.0),
+            fast_capacity_pages=d.get("fast_capacity_pages"),
+            options=SimOptions.from_dict(d.get("options", {})),
+        )

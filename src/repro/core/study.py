@@ -1,0 +1,226 @@
+"""Study: the unified typed front-end over simulate / tune / sweep.
+
+One :class:`~repro.core.specs.ExperimentSpec` in, every call pattern out:
+
+* ``Study(spec).run()`` — simulate the spec's engine config (a single
+  :class:`~repro.core.simulator.SimResult`); ``run(configs=[...])`` pushes a
+  whole candidate batch through ONE shared workload trace
+  (:func:`~repro.core.simulator.run_simulation_batch`);
+* ``Study(spec).tune(budget, batch_size)`` — SMAC-BO knob tuning
+  (:class:`~repro.core.bo.tuner.TuningSession`), batched per iteration when
+  ``batch_size > 1``;
+* ``Study(spec).sweep(...)`` — multi-engine × multi-workload grids, each
+  (engine, workload) cell evaluated as one batched simulator pass.
+
+Workload traces are built once per Study and shared across evaluations
+(builds are deterministic in the spec, so this never changes numerics — it
+only removes redundant trace generation the legacy per-call path paid).
+
+Migration table (old call -> new call):
+
+======================================================  ======================================================
+old                                                     new
+======================================================  ======================================================
+``evaluate(eng, cfg, wl, inp, machine, ...)``           ``Study(ExperimentSpec(engine=EngineSpec(eng, cfg),
+                                                        workload=WorkloadSpec(wl, inp), ...)).run().total_s``
+``evaluate_batch(eng, cfgs, wl, ...)``                  ``Study(spec).run(configs=cfgs)``
+``run_simulation(workload, eng, cfg, machine)``         ``Study(spec).run()`` (full ``SimResult``)
+``tune_scenario(eng, Scenario(...), budget, ...)``      ``Study(spec).tune(budget=..., batch_size=...)``
+``Scenario(workload, inp, machine, ...)``               ``ExperimentSpec`` (+ ``SimOptions`` for seeds/
+                                                        sampler/workers/backend)
+``make_engine(name, cfg, tier)``                        ``@register_engine(name)`` + ``Study``; the registry
+                                                        resolves dispatch
+sequential fig-2/fig-9 sweep loops                      ``Study(spec).sweep(engines=..., workloads=...,
+                                                        configs=...)``
+======================================================  ======================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple,
+                    Union)
+
+from .bo.tuner import TuningResult, TuningSession
+from .knobs import Config, KnobSpace
+from .simulator import Machine, SimResult, get_machine, run_simulation_batch
+from .specs import EngineSpec, ExperimentSpec, SimOptions, WorkloadSpec
+from .workloads import Workload, make_workload
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Results of a multi-engine × multi-workload sweep.
+
+    ``cells`` maps ``(engine_name, workload_label)`` to the list of
+    :class:`~repro.core.simulator.SimResult` for that cell's config batch
+    (one entry per config, in input order).  The workload label is
+    ``WorkloadSpec.key``; when a sweep contains several variants of the same
+    workload (different threads/scale) the label is extended with
+    ``#t<threads>/s<scale>`` so no cell is overwritten.
+    """
+
+    cells: Dict[Tuple[str, str], List[SimResult]] = \
+        dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, key: Tuple[str, str]) -> List[SimResult]:
+        return self.cells[key]
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def items(self):
+        return self.cells.items()
+
+    def total_s(self) -> Dict[Tuple[str, str], List[float]]:
+        """Execution times per cell, one per config."""
+        return {k: [r.total_s for r in v] for k, v in self.cells.items()}
+
+
+class Study:
+    """Unified front-end: one spec, three call patterns (run/tune/sweep)."""
+
+    def __init__(self, spec: Optional[ExperimentSpec] = None, *,
+                 machine: Optional[Machine] = None, **spec_kwargs):
+        if spec is None:
+            spec = ExperimentSpec(**spec_kwargs)
+        elif spec_kwargs:
+            raise TypeError("pass either a spec or spec kwargs, not both")
+        if not isinstance(spec, ExperimentSpec):
+            raise TypeError(f"expected ExperimentSpec, got {type(spec)!r}")
+        if machine is not None and machine.name != spec.machine:
+            raise ValueError(f"machine override {machine.name!r} does not "
+                             f"match spec.machine {spec.machine!r}")
+        self.spec = spec
+        # an explicit Machine instance overrides the registry resolution —
+        # this is how the legacy shims honour ad-hoc Machine objects whose
+        # name collides with a registered profile
+        self.machine: Machine = machine if machine is not None \
+            else get_machine(spec.machine)
+        self._workloads: Dict[Tuple, Workload] = {}
+
+    @property
+    def key(self) -> str:
+        return self.spec.key
+
+    # -- workload construction (cached; builds are deterministic) ----------
+    def workload(self, wspec: Optional[WorkloadSpec] = None) -> Workload:
+        wspec = wspec if wspec is not None else self.spec.workload
+        threads = wspec.threads if wspec.threads is not None \
+            else self.machine.default_threads
+        cache_key = (wspec.name, wspec.input_name, threads, wspec.scale,
+                     self.spec.options.seed)
+        wl = self._workloads.get(cache_key)
+        if wl is None:
+            wl = make_workload(wspec.name, wspec.input_name, threads=threads,
+                               scale=wspec.scale,
+                               seed=self.spec.options.seed)
+            self._workloads[cache_key] = wl
+        return wl
+
+    # -- simulate ----------------------------------------------------------
+    def run(self, configs: Optional[Sequence[Mapping[str, Any]]] = None
+            ) -> "SimResult | List[SimResult]":
+        """Simulate the spec (one ``SimResult``), or a candidate batch.
+
+        With ``configs`` (a sequence of knob configs), all B candidates run
+        through one shared workload trace and a list of per-config results
+        is returned; configs are used as-is (the optimizer and
+        :class:`~repro.core.specs.EngineSpec` produce validated configs).
+        """
+        opts = self.spec.options
+        batch = [self.spec.engine.config] if configs is None \
+            else [dict(c) for c in configs]
+        results = run_simulation_batch(
+            self.workload(), self.spec.engine.name, batch, self.machine,
+            fast_slow_ratio=self.spec.fast_slow_ratio, seeds=opts.seed,
+            sampler=opts.sampler, record_heatmap=opts.record_heatmap,
+            heat_bins=opts.heat_bins,
+            fast_capacity_pages=self.spec.fast_capacity_pages,
+            backend=opts.backend, workers=opts.workers)
+        return results[0] if configs is None else results
+
+    # -- tune --------------------------------------------------------------
+    def tune(self, budget: int = 100, batch_size: int = 1, seed: int = 0,
+             optimizer: str = "smac", n_init: int = 20,
+             random_prob: float = 0.20, verbose: bool = False,
+             space: Optional[KnobSpace] = None) -> TuningResult:
+        """SMAC-BO tuning of the spec's engine knobs (§3.1).
+
+        ``seed`` seeds the optimizer; the simulation seed stays
+        ``spec.options.seed`` (matching how the legacy ``tune_scenario``
+        reused one scenario seed across evaluations).  ``batch_size=q > 1``
+        evaluates each optimizer round as one vectorized simulator pass
+        honouring ``spec.options`` (sampler/workers/backend).
+        """
+        def objective(config: Config) -> float:
+            return self.run(configs=[config])[0].total_s
+
+        def objective_batch(configs: Sequence[Config]) -> List[float]:
+            return [r.total_s for r in self.run(configs=configs)]
+
+        session = TuningSession(
+            self.spec.engine.name, objective, scenario_key=self.key,
+            space=space, optimizer=optimizer, budget=budget, seed=seed,
+            n_init=n_init, random_prob=random_prob, batch_size=batch_size,
+            objective_batch=objective_batch if batch_size > 1 else None)
+        return session.run(verbose=verbose)
+
+    # -- sweep -------------------------------------------------------------
+    def sweep(self, grid: Optional[Mapping[str, Sequence[Any]]] = None, *,
+              engines: Optional[Sequence[Union[EngineSpec, str]]] = None,
+              workloads: Optional[Sequence[Union[WorkloadSpec, str]]] = None,
+              configs: Optional[Sequence[Mapping[str, Any]]] = None,
+              ) -> SweepResult:
+        """Evaluate a multi-engine × multi-workload grid in batched passes.
+
+        ``grid`` may bundle the axes as ``{"engines": [...], "workloads":
+        [...], "configs": [...]}``; keyword arguments override.  Axes default
+        to the spec's engine/workload; bare workload *names* inherit the
+        spec's threads and scale (pass full ``WorkloadSpec``s to vary them).  ``configs`` (shared across engines)
+        defaults to each engine spec's own config, so ``sweep(engines=[...],
+        workloads=[...])`` compares engines at their spec'd settings.  Each
+        (engine, workload) cell evaluates its whole config batch through one
+        shared trace via :func:`~repro.core.simulator.run_simulation_batch`
+        — nothing is evaluated sequentially per config.
+        """
+        grid = dict(grid or {})
+        engines = engines if engines is not None else grid.get("engines")
+        workloads = workloads if workloads is not None \
+            else grid.get("workloads")
+        configs = configs if configs is not None else grid.get("configs")
+        base_ws = self.spec.workload
+
+        def _ws(w):
+            if isinstance(w, str):  # same threads/scale, different workload
+                return WorkloadSpec(w, threads=base_ws.threads,
+                                    scale=base_ws.scale)
+            return WorkloadSpec.coerce(w)
+
+        espcs = [EngineSpec.coerce(e) for e in engines] \
+            if engines is not None else [self.spec.engine]
+        wspcs = [_ws(w) for w in workloads] \
+            if workloads is not None else [base_ws]
+        opts = self.spec.options
+        # disambiguate same-name workload variants (threads/scale sweeps) so
+        # cells never overwrite each other
+        base_keys = [w.key for w in wspcs]
+        labels = [w.key if base_keys.count(w.key) == 1
+                  else f"{w.key}#t{w.threads}/s{w.scale}" for w in wspcs]
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"duplicate workload specs in sweep: {labels}")
+        out = SweepResult()
+        for ws, wlabel in zip(wspcs, labels):
+            wl = self.workload(ws)
+            for es in espcs:
+                batch = [dict(c) for c in configs] if configs is not None \
+                    else [es.config]
+                out.cells[(es.name, wlabel)] = run_simulation_batch(
+                    wl, es.name, batch, self.machine,
+                    fast_slow_ratio=self.spec.fast_slow_ratio,
+                    seeds=opts.seed, sampler=opts.sampler,
+                    record_heatmap=opts.record_heatmap,
+                    heat_bins=opts.heat_bins,
+                    fast_capacity_pages=self.spec.fast_capacity_pages,
+                    backend=opts.backend, workers=opts.workers)
+        return out

@@ -34,12 +34,14 @@ an f(θ) evaluation cheap enough for 100-iteration tuning sessions.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
 from .pages import PAGE_BYTES
+from .registry import WORKLOADS, register_workload
 
 CACHELINE = 64
 LINES_PER_PAGE = PAGE_BYTES // CACHELINE  # 32768 cachelines per 2 MiB page
@@ -86,6 +88,7 @@ def _norm(weights: np.ndarray) -> np.ndarray:
 # builders
 # ---------------------------------------------------------------------------
 
+@register_workload("gups", default_input="8GiB-hot")
 def _gups(input_name: str, threads: int, scale: float, seed: int) -> Workload:
     rss = 64.03
     n = _pages_for(rss, scale)
@@ -114,6 +117,7 @@ def _gups(input_name: str, threads: int, scale: float, seed: int) -> Workload:
                     epoch_access=epoch_access, seed=seed)
 
 
+@register_workload("silo", default_input="ycsb-c")
 def _silo(input_name: str, threads: int, scale: float, seed: int) -> Workload:
     rss = 71.40 if input_name == "ycsb-c" else 75.68
     n = _pages_for(rss, scale)
@@ -227,6 +231,7 @@ def _gapbs(kind: str, input_name: str, threads: int, scale: float,
                     epoch_access=epoch_access, seed=seed)
 
 
+@register_workload("btree")
 def _btree(input_name: str, threads: int, scale: float, seed: int) -> Workload:
     rss = 12.13
     n = _pages_for(rss, scale)
@@ -279,6 +284,7 @@ def _btree(input_name: str, threads: int, scale: float, seed: int) -> Workload:
                     epoch_access=epoch_access, seed=seed)
 
 
+@register_workload("xsbench")
 def _xsbench(input_name: str, threads: int, scale: float, seed: int) -> Workload:
     rss = 64.97
     n = _pages_for(rss, scale)
@@ -308,6 +314,7 @@ def _xsbench(input_name: str, threads: int, scale: float, seed: int) -> Workload
                     epoch_access=epoch_access, seed=seed)
 
 
+@register_workload("graph500", default_input="kron")
 def _graph500(input_name: str, threads: int, scale: float, seed: int) -> Workload:
     rss = 34.13
     n = _pages_for(rss, scale)
@@ -336,18 +343,11 @@ def _graph500(input_name: str, threads: int, scale: float, seed: int) -> Workloa
 
 
 # ---------------------------------------------------------------------------
-# registry
+# registration (the gapbs builders share one parameterized function)
 # ---------------------------------------------------------------------------
-_BUILDERS: Dict[str, Callable[..., Workload]] = {
-    "gups": lambda inp, t, s, seed: _gups(inp or "8GiB-hot", t, s, seed),
-    "silo": lambda inp, t, s, seed: _silo(inp or "ycsb-c", t, s, seed),
-    "gapbs-bc": lambda inp, t, s, seed: _gapbs("bc", inp or "kron", t, s, seed),
-    "gapbs-pr": lambda inp, t, s, seed: _gapbs("pr", inp or "kron", t, s, seed),
-    "gapbs-cc": lambda inp, t, s, seed: _gapbs("cc", inp or "kron", t, s, seed),
-    "btree": lambda inp, t, s, seed: _btree(inp or "", t, s, seed),
-    "xsbench": lambda inp, t, s, seed: _xsbench(inp or "", t, s, seed),
-    "graph500": lambda inp, t, s, seed: _graph500(inp or "kron", t, s, seed),
-}
+for _kind in ("bc", "pr", "cc"):
+    register_workload(f"gapbs-{_kind}", default_input="kron")(
+        functools.partial(_gapbs, _kind))
 
 #: the paper's default benchmark set (Table 4) with its default inputs
 PAPER_SUITE: List[Tuple[str, str]] = [
@@ -359,8 +359,5 @@ PAPER_SUITE: List[Tuple[str, str]] = [
 
 def make_workload(name: str, input_name: str = "", threads: int = 12,
                   scale: float = 0.25, seed: int = 0) -> Workload:
-    try:
-        builder = _BUILDERS[name]
-    except KeyError:
-        raise KeyError(f"unknown workload {name!r}; have {sorted(_BUILDERS)}")
-    return builder(input_name, threads, scale, seed)
+    """Build the registered workload ``name`` (registry-resolved)."""
+    return WORKLOADS.get(name)(input_name, threads, scale, seed)

@@ -1,0 +1,93 @@
+"""Deprecation shims: every legacy entry point warns AND matches the typed
+API numerically.
+
+CI runs this file with ``-W "error:repro.:DeprecationWarning"`` so a shim
+that stops warning (or a new-API path that starts warning) fails loudly;
+every intentional legacy call below is wrapped in ``pytest.warns``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
+from repro.core.pages import TierState
+
+SCALE = 0.02
+
+
+def _study(engine="hemem", **opts):
+    return Study(ExperimentSpec(engine=engine,
+                                workload=WorkloadSpec("gups", scale=SCALE),
+                                options=SimOptions(**opts)))
+
+
+def test_evaluate_warns_and_matches():
+    from repro.core.simulator import evaluate
+    with pytest.warns(DeprecationWarning, match="repro.core.simulator"):
+        legacy = evaluate("hemem", None, "gups", scale=SCALE, seed=4)
+    assert legacy == _study(seed=4).run().total_s
+
+
+def test_evaluate_batch_warns_and_matches():
+    from repro.core.knobs import HEMEM_SPACE
+    from repro.core.simulator import evaluate_batch
+    cfgs = [HEMEM_SPACE.default_config(),
+            HEMEM_SPACE.validate({"migration_period": 100})]
+    with pytest.warns(DeprecationWarning, match="evaluate_batch"):
+        legacy = evaluate_batch("hemem", cfgs, "gups", scale=SCALE, seed=4)
+    new = [r.total_s for r in
+           _study(seed=4, sampler="sparse").run(configs=cfgs)]
+    assert legacy == new
+
+
+def test_run_simulation_warns_and_matches():
+    from repro.core.simulator import run_simulation
+    from repro.core.workloads import make_workload
+    wl = make_workload("gups", "", threads=12, scale=SCALE, seed=0)
+    with pytest.warns(DeprecationWarning, match="run_simulation"):
+        legacy = run_simulation(wl, "static", {}, "pmem-large", seed=0)
+    new = Study(ExperimentSpec(
+        engine="static", workload=WorkloadSpec("gups", threads=12,
+                                               scale=SCALE))).run()
+    assert legacy.total_s == new.total_s
+    np.testing.assert_array_equal(legacy.epoch_wall_ms, new.epoch_wall_ms)
+
+
+def test_make_engine_warns_and_builds_wrapper():
+    from repro.core.engine import HeMemEngine, make_engine
+    from repro.core.knobs import HEMEM_SPACE
+    tier = TierState(64, 8)
+    with pytest.warns(DeprecationWarning, match="make_engine"):
+        eng = make_engine("hemem", HEMEM_SPACE.default_config(), tier)
+    assert isinstance(eng, HeMemEngine)
+    with pytest.warns(DeprecationWarning), pytest.raises(KeyError):
+        make_engine("hemen", {}, TierState(64, 8))
+
+
+def test_scenario_warns_and_objective_matches():
+    from repro.core.simulator import Scenario
+    with pytest.warns(DeprecationWarning, match="Scenario"):
+        sc = Scenario("gups", "", scale=SCALE, seed=6)
+    cfg = _study().spec.engine.config
+    assert sc.objective("hemem")(cfg) == _study(seed=6).run().total_s
+
+
+def test_tune_scenario_warns_and_matches():
+    from repro.core.bo.tuner import tune_scenario
+    from repro.core.simulator import Scenario
+    with pytest.warns(DeprecationWarning):
+        sc = Scenario("gups", "", scale=SCALE)
+        legacy = tune_scenario("hemem", sc, budget=4, seed=2)
+    res = _study().tune(budget=4, seed=2)
+    assert [o.value for o in legacy.history] == \
+        [o.value for o in res.history]
+
+
+def test_new_api_does_not_warn():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        st = _study(seed=1)
+        st.run()
+        st.tune(budget=2, seed=1)
+        st.sweep(engines=["static"])

@@ -1,0 +1,160 @@
+"""Study front-end: equivalence with the legacy paths + registry extension.
+
+The acceptance bar of PR 2: ``Study(spec).run()`` / ``.tune()`` must be
+numerically identical to the legacy ``evaluate`` / ``tune_scenario`` paths
+with matched seeds, and an engine registered via ``@register_engine`` in
+THIS file must run through ``Study`` without touching engine.py dispatch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineSpec, ExperimentSpec, SimOptions, Study,
+                        WorkloadSpec, register_engine)
+from repro.core.engine import BatchTieringEngine
+from repro.core.knobs import Knob, KnobSpace, get_space
+from repro.core.pages import MigrationPlan
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+SCALE = 0.02
+ALL_ENGINES = ["hemem", "hmsdk", "memtis", "static", "oracle"]
+
+
+def _spec(engine="hemem", workload="gups", **opts):
+    return ExperimentSpec(engine=engine,
+                          workload=WorkloadSpec(workload, scale=SCALE),
+                          options=SimOptions(**opts))
+
+
+# ---------------------------------------------------------------------------
+# run()
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_run_matches_legacy_evaluate(engine):
+    from repro.core.simulator import evaluate
+    res = Study(_spec(engine, seed=5)).run()
+    legacy = evaluate(engine, None, "gups", "", threads=None, scale=SCALE,
+                      seed=5)
+    assert res.total_s == legacy
+    assert res.engine == engine and res.workload == "gups:8GiB-hot"
+
+
+def test_run_batch_matches_single_runs():
+    space = get_space("hemem")
+    rng = np.random.default_rng(0)
+    cfgs = [space.default_config()] + space.sample_batch(rng, 2)
+    study = Study(_spec(seed=2, sampler="sparse"))
+    batch = study.run(configs=cfgs)
+    for cfg, res in zip(cfgs, batch):
+        single = Study(ExperimentSpec(
+            engine=EngineSpec("hemem", cfg),
+            workload=WorkloadSpec("gups", scale=SCALE),
+            options=SimOptions(seed=2, sampler="sparse"))).run()
+        assert res.total_s == single.total_s
+        np.testing.assert_array_equal(res.epoch_wall_ms, single.epoch_wall_ms)
+
+
+# ---------------------------------------------------------------------------
+# tune()
+# ---------------------------------------------------------------------------
+def test_tune_matches_legacy_tune_scenario():
+    from repro.core.bo.tuner import tune_scenario
+    from repro.core.simulator import Scenario
+    res = Study(_spec()).tune(budget=5, seed=9)
+    legacy = tune_scenario("hemem", Scenario("gups", "", scale=SCALE),
+                           budget=5, seed=9)
+    assert [o.value for o in res.history] == \
+        [o.value for o in legacy.history]
+    assert [o.config for o in res.history] == \
+        [o.config for o in legacy.history]
+    assert res.default_value == legacy.default_value
+
+
+def test_tune_batched_matches_legacy_batched():
+    from repro.core.bo.tuner import tune_scenario
+    from repro.core.simulator import Scenario
+    res = Study(_spec(sampler="sparse")).tune(budget=6, batch_size=3, seed=9)
+    legacy = tune_scenario("hemem", Scenario("gups", "", scale=SCALE),
+                           budget=6, seed=9, batch_size=3)
+    assert [o.value for o in res.history] == \
+        [o.value for o in legacy.history]
+    assert len(res.history) == 6
+
+
+# ---------------------------------------------------------------------------
+# sweep()
+# ---------------------------------------------------------------------------
+def test_sweep_grid_matches_individual_runs():
+    study = Study(_spec(seed=1, sampler="sparse"))
+    sweep = study.sweep(engines=["static", "oracle"],
+                        workloads=["gups", "xsbench"])
+    assert len(sweep) == 4
+    for (ename, wkey), results in sweep.items():
+        assert len(results) == 1
+        single = Study(ExperimentSpec(
+            engine=ename, workload=WorkloadSpec(wkey.split(":")[0],
+                                                scale=SCALE),
+            options=SimOptions(seed=1, sampler="sparse"))).run()
+        assert results[0].total_s == single.total_s
+    totals = sweep.total_s()
+    assert totals[("oracle", "gups")][0] <= totals[("static", "gups")][0]
+
+
+def test_sweep_shared_configs_across_engines():
+    study = Study(_spec())
+    cfgs = [get_space("hemem").default_config(),
+            get_space("hemem").validate({"read_hot_threshold": 2})]
+    sweep = study.sweep({"configs": cfgs})
+    assert [r.config["read_hot_threshold"] for r in
+            sweep[("hemem", "gups")]] == [8, 2]
+
+
+# ---------------------------------------------------------------------------
+# extension seam: a new engine registered HERE runs through Study
+# ---------------------------------------------------------------------------
+TRACE_SPACE = KnobSpace([
+    Knob("promote_top_k", 16, 1, 256, is_int=True, log=True),
+])
+
+
+@register_engine("topk-test", space=TRACE_SPACE)
+class BatchTopKEngine(BatchTieringEngine):
+    """Toy policy: keep the top-k hottest observed pages in the fast tier."""
+
+    def __init__(self, configs, btier, seeds=0, sampler="elementwise"):
+        super().__init__(configs, btier, seeds, sampler)
+        self._heat = np.zeros((self.batch, btier.n_pages))
+        self.top_k = self._knob("promote_top_k", dtype=np.int64)
+
+    def observe(self, reads, writes, epoch_ms):
+        self._heat = 0.5 * self._heat + (reads + writes)[None, :]
+        self.samples_last_epoch = np.zeros(self.batch)
+
+    def plan(self, epoch_ms, max_pages_this_epoch):
+        plans = []
+        for b in range(self.batch):
+            k = int(self.top_k[b])
+            hot = np.argsort(-self._heat[b], kind="stable")[:k]
+            want = np.zeros(self.btier.n_pages, dtype=bool)
+            want[hot] = True
+            promote = np.flatnonzero(want & ~self.btier.in_fast[b]
+                                     & self.btier.allocated[b])
+            room = int(self.btier.fast_free[b])
+            plans.append(MigrationPlan(promote=promote[:room],
+                                       demote=np.zeros(0, dtype=np.int64)))
+        return plans
+
+
+def test_registered_engine_runs_through_study():
+    res = Study(_spec("topk-test")).run()
+    assert res.engine == "topk-test" and np.isfinite(res.total_s)
+    # its knob space is visible to the tuner without touching engine.py
+    tr = Study(_spec("topk-test")).tune(budget=3, seed=0, n_init=2)
+    assert len(tr.history) == 3 and np.isfinite(tr.best_value)
+
+
+def test_registered_engine_specs_round_trip():
+    spec = _spec("topk-test")
+    assert spec.engine.config == {"promote_top_k": 16}
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
