@@ -11,25 +11,35 @@
   traffic; the per-input heatmaps differ, which is why configs don't
   transfer (fig7).
 
-Saves the raw time series + access heatmaps to results/fig3_timelines.json.
+Runs through the typed :class:`~repro.core.study.Study` API (tuning via
+``Study.tune``, heatmap series via a ``SimOptions(record_heatmap=True)``
+study).  Saves the raw time series + access heatmaps to
+results/fig3_timelines.json.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.bo.tuner import tune_scenario
-from repro.core.simulator import PMEM_LARGE, Scenario, run_simulation
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 from repro.core.workloads import make_workload
 
 from .common import budget, claim, print_claims, save
 
 
+def _tune(wname, inp, b):
+    study = Study(ExperimentSpec(engine="hemem",
+                                 workload=WorkloadSpec(wname, inp)))
+    return study.tune(budget=b, seed=31)
+
+
 def _series(wname, inp, cfg):
-    wl = make_workload(wname, inp, threads=12, scale=0.25, seed=0)
-    r = run_simulation(wl, "hemem", cfg, PMEM_LARGE, seed=0,
-                       record_heatmap=True, heat_bins=64)
-    return r
+    spec = ExperimentSpec(
+        engine="hemem" if cfg is None else {"name": "hemem", "config": cfg},
+        workload=WorkloadSpec(wname, inp, threads=12, scale=0.25),
+        machine="pmem-large",
+        options=SimOptions(record_heatmap=True, heat_bins=64))
+    return Study(spec).run()
 
 
 def run(quick: bool = False) -> dict:
@@ -38,8 +48,7 @@ def run(quick: bool = False) -> dict:
     claims = []
 
     # BC: default-vs-best migration timelines
-    sc = Scenario("gapbs-bc", "kron")
-    res = tune_scenario("hemem", sc, budget=b, seed=31)
+    res = _tune("gapbs-bc", "kron", b)
     r_def = _series("gapbs-bc", "kron", None)
     r_best = _series("gapbs-bc", "kron", res.best.config)
     out["bc"] = {
@@ -61,8 +70,7 @@ def run(quick: bool = False) -> dict:
         f"{burst_frac:.0%} of migrations in the first third of iterations"))
 
     # PR: default churns, best flatlines
-    sc = Scenario("gapbs-pr", "kron")
-    res_pr = tune_scenario("hemem", sc, budget=b, seed=31)
+    res_pr = _tune("gapbs-pr", "kron", b)
     r_def = _series("gapbs-pr", "kron", None)
     r_best = _series("gapbs-pr", "kron", res_pr.best.config)
     out["pr"] = {
@@ -75,8 +83,7 @@ def run(quick: bool = False) -> dict:
         f"{r_def.total_migrations} -> {r_best.total_migrations}"))
 
     # XSBench: hot rows of the heatmap stay fast-resident under best
-    sc = Scenario("xsbench", "")
-    res_xs = tune_scenario("hemem", sc, budget=b, seed=31)
+    res_xs = _tune("xsbench", "", b)
     r_best = _series("xsbench", "", res_xs.best.config)
     hot_bins = 1   # first bin is entirely hot-set pages (first-touch layout)
     hot_resid = float(r_best.placement[10:, :hot_bins].mean())

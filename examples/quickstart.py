@@ -6,9 +6,18 @@ table.
 
 Pass ``--batch-size 8`` to evaluate whole candidate batches per tuning
 iteration through the vectorized simulator, and ``--workers auto`` to
-additionally shard each batch over a process pool.  The experiment is fully
-described by one JSON-round-trippable ``ExperimentSpec``; see
-``examples/legacy_quickstart.py`` for the deprecated pre-PR-2 call pattern.
+additionally shard each batch over a process pool.  With jax installed,
+``--batch-size 8 --backend jax`` compiles the whole epoch loop (engines +
+samplers + cost model) into one jitted ``lax.scan`` and adds ``--crn``
+common-random-number evaluation, so every candidate batch is compared under
+identical monitoring noise::
+
+    PYTHONPATH=src python examples/quickstart.py --batch-size 8 \\
+        --backend jax --crn
+
+The experiment is fully described by one JSON-round-trippable
+``ExperimentSpec``; see ``examples/legacy_quickstart.py`` for the
+deprecated pre-PR-2 call pattern.
 """
 import argparse
 import json
@@ -31,6 +40,13 @@ def main():
                          "vectorized simulator pass (1 = sequential)")
     ap.add_argument("--workers", default=1,
                     help="process-pool size for batch sharding (int or auto)")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="'jax' compiles the whole epoch loop (one jitted "
+                         "lax.scan per engine/workload shape)")
+    ap.add_argument("--crn", action="store_true",
+                    help="common random numbers: all candidates of a batch "
+                         "see identical monitoring noise (requires "
+                         "--backend jax)")
     args = ap.parse_args()
     workers = args.workers if args.workers == "auto" else int(args.workers)
 
@@ -39,7 +55,8 @@ def main():
         workload=WorkloadSpec(args.workload, args.input),
         machine=args.machine,
         options=SimOptions(sampler="sparse" if args.batch_size > 1
-                           else "elementwise", workers=workers))
+                           else "elementwise", workers=workers,
+                           backend=args.backend, crn=args.crn))
     study = Study(spec)
     mode = f"batch q={args.batch_size}" if args.batch_size > 1 else "sequential"
     print(f"Tuning HeMem for {study.key} (budget {args.budget}, {mode})...")

@@ -81,12 +81,45 @@ class SMACOptimizer:
             Observation(self.space.validate(config), float(value)))
         self._surrogate = None  # invalidate
 
-    def tell_batch(self, configs, values) -> None:
-        """Record one batched evaluation round."""
+    @staticmethod
+    def _config_key(config: Mapping[str, Any]):
+        return tuple(sorted(config.items()))
+
+    def tell_batch(self, configs, values, crn: bool = False) -> None:
+        """Record one batched evaluation round.
+
+        ``crn=True`` marks the round as evaluated under common random
+        numbers (all configs shared one noise draw, e.g.
+        ``SimOptions(crn=True)``).  If the round re-evaluated any
+        already-observed config (a *control* — :meth:`ask_batch` with
+        ``include_incumbent=True`` plants one), the mean difference between
+        the control's new and previously recorded values estimates the
+        round's shared noise offset, and the whole round is debiased by it
+        before being recorded — the classic CRN paired-comparison
+        variance reduction.  Without controls (or with ``crn=False``,
+        the default) values are recorded unchanged.
+
+        Note: the compiled simulator's counter-based CRN noise is fixed
+        given the spec seed (re-evaluations are bitwise-deterministic), so
+        there the offset is always zero and no control is worth planting;
+        the debias matters for objectives that redraw their shared noise
+        each round (real systems, per-round seeds).
+        """
         if len(configs) != len(values):
             raise ValueError("configs and values must have equal length")
+        configs = [self.space.validate(c) for c in configs]
+        offset = 0.0
+        if crn and self.observations:
+            recorded = {}
+            for o in self.observations:
+                recorded.setdefault(self._config_key(o.config), o.value)
+            deltas = [float(v) - recorded[self._config_key(c)]
+                      for c, v in zip(configs, values)
+                      if self._config_key(c) in recorded]
+            if deltas:
+                offset = float(np.mean(deltas))
         for cfg, val in zip(configs, values):
-            self.tell(cfg, val)
+            self.tell(cfg, float(val) - offset)
 
     # -- surrogate ------------------------------------------------------------
     def surrogate(self) -> RandomForest:
@@ -132,7 +165,8 @@ class SMACOptimizer:
             self.rng, max(8, n_candidates - len(cands))))
         return cands
 
-    def ask_batch(self, q: int) -> List[Config]:
+    def ask_batch(self, q: int, include_incumbent: bool = False
+                  ) -> List[Config]:
         """Suggest ``q`` configs for one batched evaluation round.
 
         Slots that the sequential schedule would spend on exploration
@@ -140,9 +174,19 @@ class SMACOptimizer:
         exploratory; the rest are the top-``q`` EI candidates from one
         shared pool.  ``q=1`` delegates to :meth:`ask`, preserving
         bit-identical sequential histories.
+
+        ``include_incumbent=True`` (for CRN objectives whose shared noise
+        is redrawn each round) spends slot 0 on re-evaluating the current
+        best config once the model phase has begun, giving
+        :meth:`tell_batch` a control for estimating the round's shared
+        noise offset.
         """
         if q < 1:
             raise ValueError("q must be >= 1")
+        if include_incumbent and q > 1 and \
+                len(self.observations) >= self.n_init:
+            rest = self.ask_batch(q - 1)
+            return [dict(self.best.config)] + rest
         if q == 1:
             return [self.ask()]
         out: List[Config] = []
@@ -209,7 +253,10 @@ class RandomSearch:
     def best(self) -> Observation:
         return min(self.observations, key=lambda o: o.value)
 
-    def ask_batch(self, q: int) -> List[Config]:
+    def ask_batch(self, q: int, include_incumbent: bool = False
+                  ) -> List[Config]:
+        # include_incumbent is accepted for interface parity with
+        # SMACOptimizer; unguided search has no model to debias for
         out = []
         for j in range(q):
             first = len(self.observations) + j == 0
@@ -218,7 +265,7 @@ class RandomSearch:
                        else self.space.sample(self.rng))
         return out
 
-    def tell_batch(self, configs, values) -> None:
+    def tell_batch(self, configs, values, crn: bool = False) -> None:
         if len(configs) != len(values):
             raise ValueError("configs and values must have equal length")
         for cfg, val in zip(configs, values):
@@ -239,7 +286,15 @@ class RandomSearch:
 def grid_search(space: KnobSpace, objective, knob_values: Dict[str, List[Any]],
                 base: Optional[Config] = None
                 ) -> Tuple[Config, float, Dict[Tuple, float]]:
-    """Exhaustive grid over a subset of knobs (the paper's Fig-1 case study)."""
+    """Exhaustive grid over a subset of knobs (the paper's Fig-1 case study).
+
+    Deprecated: build the grid configs explicitly and evaluate them as ONE
+    batched ``Study(spec).run(configs=...)`` pass (what fig1_grid /
+    smac_efficiency do now) — same numbers, one shared trace.
+    """
+    from .._deprecation import warn_deprecated
+    warn_deprecated("repro.core.bo.smac.grid_search",
+                    "Study(spec).run(configs=<grid configs>)")
     import itertools
     base = dict(base or space.default_config())
     names = list(knob_values)

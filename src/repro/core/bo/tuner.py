@@ -66,7 +66,8 @@ class TuningSession:
                  n_init: int = 20, random_prob: float = 0.20,
                  batch_size: int = 1,
                  objective_batch: Optional[
-                     Callable[[Sequence[Config]], Sequence[float]]] = None):
+                     Callable[[Sequence[Config]], Sequence[float]]] = None,
+                 crn: bool = False):
         self.engine = engine
         self.space = space if space is not None else get_space(engine)
         self.objective = objective
@@ -74,6 +75,15 @@ class TuningSession:
         self.scenario_key = scenario_key
         self.budget = budget
         self.batch_size = max(1, int(batch_size))
+        #: the batched objective evaluates under common random numbers, so
+        #: tell_batch(crn=True) debiases any re-evaluated config against its
+        #: recorded value.  No incumbent control is planted here: with the
+        #: simulator's counter-based draws the noise is FIXED given the
+        #: spec seed (re-evaluations are bitwise-deterministic), so a
+        #: control could never measure a nonzero offset and would only burn
+        #: a budget slot.  ask_batch(include_incumbent=True) remains
+        #: available for objectives with fresh shared noise per round.
+        self.crn = bool(crn)
         if self.batch_size > 1 and objective_batch is None:
             # fall back to mapping the scalar objective over the batch
             self.objective_batch = lambda cfgs: [float(objective(c))
@@ -104,7 +114,7 @@ class TuningSession:
                 q = min(self.batch_size, self.budget - done)
                 cfgs = self.optimizer.ask_batch(q)
                 vals = [float(v) for v in self.objective_batch(cfgs)]
-                self.optimizer.tell_batch(cfgs, vals)
+                self.optimizer.tell_batch(cfgs, vals, crn=self.crn)
                 for j, (cfg, val) in enumerate(zip(cfgs, vals)):
                     cb(done + j, cfg, val)
                 done += q

@@ -36,9 +36,21 @@ Two sampling backends are provided (``sampler=``):
   the long cold tail.  Cost scales with *sampled events*, not pages, which is
   what makes batched tuning sweeps fast.
 
+**Two-backend contract.**  The engines in this module are the **numpy
+reference**: they consume sequential RNG streams and define the bit-exact
+semantics every other path is measured against (batch == sequential, both
+samplers equal in distribution).  ``backend="jax"`` swaps in the *compiled*
+re-implementation of the same five engines (:mod:`repro.core.engine_jax`):
+pure-functional state transitions driven by one jitted ``lax.scan`` over
+epochs, with counter-based monitoring draws — equal in distribution but not
+stream-compatible, so cross-backend comparisons are statistical.  Changes to
+the migration/classification logic here must be mirrored there (the parity
+tests in ``tests/test_jax_backend.py`` pin the two together).
+
 Engines and samplers are looked up through :mod:`repro.core.registry`
 (``@register_engine`` / ``register_sampler``), so new policies plug into
-``Study``/``make_batch_engine`` without touching any dispatch code here.
+``Study``/``make_batch_engine`` without touching any dispatch code here
+(custom engines run on the numpy path; the jax path covers the builtins).
 """
 
 from __future__ import annotations

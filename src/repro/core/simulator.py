@@ -20,14 +20,30 @@ time.  It models, per epoch of fixed application work:
 **Batched evaluation** is the primary entry point:
 :func:`run_simulation_batch` carries a whole batch of B candidate
 configurations through ONE shared workload trace — the engines keep
-``(B, n_pages)`` state, the access-cost model is evaluated as vectorized
-``(B,)`` arithmetic (optionally via ``jax.vmap`` with ``backend="jax"``), and
-the batch can additionally be sharded over a process pool (``workers=N``).
-Per-config random streams are independent and seeded exactly like the
-single-config path, so ``run_simulation_batch([c1..cB])`` returns the same
-numbers as B sequential :func:`run_simulation` calls with matched seeds and
-the same ``sampler``.  :func:`run_simulation` itself is the thin ``B=1``
+``(B, n_pages)`` state, and the batch can additionally be sharded over a
+process pool (``workers=N``) or, with multi-cell work, scheduled through
+one shared shard queue (:func:`run_simulation_cells`, used by
+``Study.sweep``).  :func:`run_simulation` itself is the thin ``B=1``
 wrapper kept for existing callers.
+
+**Two-backend contract** (``backend=``):
+
+* ``"numpy"`` (default) — the bit-exact reference.  Per-config random
+  streams are independent and seeded exactly like the single-config path,
+  so ``run_simulation_batch([c1..cB])`` returns the same numbers as B
+  sequential :func:`run_simulation` calls with matched seeds and the same
+  ``sampler``.
+* ``"jax"`` — the compiled fast path: the WHOLE epoch loop (engine
+  observe/plan, fused Poisson sampling kernels, tier update and this
+  module's access-cost model) jit-compiles into one ``lax.scan`` per
+  (engine, workload shape); see :mod:`repro.core.engine_jax`.  Draws are
+  counter-based — equal in distribution to the reference but not
+  stream-compatible, so cross-backend parity is statistical.  ``crn=True``
+  additionally shares the monitoring noise bitwise across the batch
+  (common random numbers) for paired candidate comparisons during tuning;
+  leave it off when estimating absolute performance from independent
+  replicas.  Engines/samplers outside the builtin set fall back to the
+  numpy epoch loop with the vmapped jax cost model.
 
 Scaling: ``workload.scale`` shrinks the page count and access volume while
 *time semantics stay real*: effective bandwidth and memory-level parallelism
@@ -47,6 +63,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from ._deprecation import warn_deprecated
+from . import engine_jax
 from .engine import make_batch_engine
 from .knobs import get_space
 from .pages import BatchTierState, PAGE_BYTES, migration_rate_pages
@@ -247,34 +264,22 @@ register_backend("jax", _jax_cost_fn)
 # ---------------------------------------------------------------------------
 # Core loop (batched)
 # ---------------------------------------------------------------------------
-def _run_batch_local(workload: Workload, engine_name: str,
-                     configs: Sequence[Mapping[str, Any]],
-                     machine: Machine, fast_slow_ratio: float,
-                     seeds, sampler: str, record_heatmap: bool,
-                     heat_bins: int, fast_capacity_pages: Optional[int],
-                     backend: str) -> List[SimResult]:
-    B = len(configs)
-    n = workload.n_pages
-    scale = workload.scale
-    if fast_capacity_pages is None:
-        fast_capacity_pages = max(1, int(round(n / (1.0 + fast_slow_ratio))))
-    tier = BatchTierState(B, n, fast_capacity_pages)
-    sim_cfgs = [scale_config(engine_name, c, scale) for c in configs]
-    engine = make_batch_engine(engine_name, sim_cfgs, tier, seeds=seeds,
-                               sampler=sampler)
-
+def _epoch_consts(workload: Workload, engine_name: str, machine: Machine,
+                  page_bytes: int) -> Dict[str, float]:
+    """The scalar constants of the access-cost model (shared by both
+    backends).  Effective parallel resources shrink with ``scale`` so time
+    semantics stay real; see the module docstring."""
     threads = workload.threads
-    # effective parallel resources shrink with scale (time stays real)
+    scale = workload.scale
     eff_bw = scale
     eff_par = threads * workload.mlp * scale
     near_bw = machine.near_bw_gbs * 1e9 * eff_bw
     far_bw_r = machine.far_bw_read_gbs * 1e9 * eff_bw
     far_bw_w = machine.far_bw_write_gbs * 1e9 * eff_bw
-    page_bytes = tier.page_bytes
     # probe-cost knob: engines that sample pay per-sample CPU; DAMON pays per
     # scan probe (engine reports its probes via samples_last_epoch).
     probe_us = machine.scan_us if engine_name == "hmsdk" else machine.sample_us
-    const = {
+    return {
         "near_bw": near_bw, "far_bw_r": far_bw_r, "far_bw_w": far_bw_w,
         "near_lat_s": machine.near_lat_ns * 1e-9,
         "far_lat_s": machine.far_lat_ns * 1e-9,
@@ -284,6 +289,100 @@ def _run_batch_local(workload: Workload, engine_name: str,
         "probe_us": probe_us, "threads_floor": max(threads, 1),
         "compute_ms": workload.compute_ms,
     }
+
+
+def _fast_capacity(workload: Workload, fast_slow_ratio: float,
+                   fast_capacity_pages: Optional[int]) -> int:
+    if fast_capacity_pages is not None:
+        return int(fast_capacity_pages)
+    return max(1, int(round(workload.n_pages / (1.0 + fast_slow_ratio))))
+
+
+def _run_batch_jax(workload: Workload, engine_name: str,
+                   configs: Sequence[Mapping[str, Any]], machine: Machine,
+                   fast_slow_ratio: float, seeds, sampler: str,
+                   record_heatmap: bool, heat_bins: int,
+                   fast_capacity_pages: Optional[int], crn: bool,
+                   batch_offset: int) -> List[SimResult]:
+    """The compiled fast path: one ``lax.scan`` over epochs per batch (see
+    :mod:`repro.core.engine_jax` for the backend contract)."""
+    B = len(configs)
+    n = workload.n_pages
+    scale = workload.scale
+    fast_cap = _fast_capacity(workload, fast_slow_ratio, fast_capacity_pages)
+    sim_cfgs = [scale_config(engine_name, c, scale) for c in configs]
+    const = _epoch_consts(workload, engine_name, machine, PAGE_BYTES)
+    out = engine_jax.run_epochs(
+        workload, engine_name, sim_cfgs, const, fast_cap, PAGE_BYTES,
+        seeds, sampler, crn=crn, batch_offset=batch_offset,
+        record_placement=record_heatmap)
+    wall = np.asarray(out["wall_ms"], dtype=np.float64)
+    cum_mig = np.asarray(out["cum_migrations"], dtype=np.float64)
+    hit_rate = np.asarray(out["hit_rate"], dtype=np.float64)
+    sampling_ms = np.asarray(out["sampling_ms"], dtype=np.float64)
+    stall_ms = np.asarray(out["stall_ms"], dtype=np.float64)
+    n_epochs = workload.n_epochs
+    heat = place = None
+    if record_heatmap:
+        bin_of = np.arange(n) * heat_bins // n
+        bin_sizes = np.maximum(np.bincount(bin_of, minlength=heat_bins), 1)
+        heat = np.zeros((n_epochs, heat_bins))
+        place = np.zeros((B, n_epochs, heat_bins))
+        in_fast = np.asarray(out["in_fast"])
+        acc_t = (out["trace_reads"] + out["trace_writes"]).astype(np.float64)
+        for e in range(n_epochs):
+            heat[e] = np.bincount(bin_of, weights=acc_t[e],
+                                  minlength=heat_bins)
+            for b in range(B):
+                place[b, e] = np.bincount(
+                    bin_of, weights=in_fast[e, b].astype(np.float64),
+                    minlength=heat_bins) / bin_sizes
+    return [SimResult(
+        workload=workload.key, engine=engine_name, machine=machine.name,
+        config=dict(configs[b]), total_s=float(wall[:, b].sum() / 1e3),
+        epoch_wall_ms=wall[:, b].copy(), cum_migrations=cum_mig[:, b].copy(),
+        fast_hit_rate=hit_rate[:, b].copy(),
+        sampling_ms=sampling_ms[:, b].copy(),
+        stall_ms=stall_ms[:, b].copy(),
+        heatmap=heat if record_heatmap else None,
+        placement=place[b] if record_heatmap else None) for b in range(B)]
+
+
+def _run_batch_local(workload: Workload, engine_name: str,
+                     configs: Sequence[Mapping[str, Any]],
+                     machine: Machine, fast_slow_ratio: float,
+                     seeds, sampler: str, record_heatmap: bool,
+                     heat_bins: int, fast_capacity_pages: Optional[int],
+                     backend: str, crn: bool = False,
+                     batch_offset: int = 0) -> List[SimResult]:
+    if backend == "jax" and engine_jax.supports(engine_name, sampler,
+                                                workload.n_pages):
+        # the compiled fast path: engines + samplers + cost model fused into
+        # one jitted lax.scan over epochs
+        return _run_batch_jax(workload, engine_name, configs, machine,
+                              fast_slow_ratio, seeds, sampler, record_heatmap,
+                              heat_bins, fast_capacity_pages, crn,
+                              batch_offset)
+    if crn:
+        raise ValueError(
+            "crn=True (common random numbers) requires the compiled jax "
+            "path (backend='jax', builtin engine/sampler, trace within its "
+            "page limit): the numpy engines consume sequential RNG streams "
+            "that cannot be shared across configs (got "
+            f"backend={backend!r}, engine={engine_name!r}, "
+            f"sampler={sampler!r}, n_pages={workload.n_pages})")
+    B = len(configs)
+    n = workload.n_pages
+    scale = workload.scale
+    fast_capacity_pages = _fast_capacity(workload, fast_slow_ratio,
+                                         fast_capacity_pages)
+    tier = BatchTierState(B, n, fast_capacity_pages)
+    sim_cfgs = [scale_config(engine_name, c, scale) for c in configs]
+    engine = make_batch_engine(engine_name, sim_cfgs, tier, seeds=seeds,
+                               sampler=sampler)
+
+    page_bytes = tier.page_bytes
+    const = _epoch_consts(workload, engine_name, machine, page_bytes)
 
     n_epochs = workload.n_epochs
     wall = np.zeros((n_epochs, B))
@@ -411,7 +510,7 @@ def _get_pool(workers: int):
 def _shard_worker(args):
     (wl_spec, components, engine_name, configs, machine, fast_slow_ratio,
      seeds, sampler, record_heatmap, heat_bins, fast_capacity_pages,
-     backend) = args
+     backend, crn, batch_offset) = args
     # spawn-context workers start from a fresh interpreter that only imported
     # this module, so components registered (or overridden) by user code are
     # unknown there; the parent's resolved objects shipped in the payload are
@@ -427,13 +526,115 @@ def _shard_worker(args):
     wl = make_workload(*wl_spec)
     return _run_batch_local(wl, engine_name, configs, machine,
                             fast_slow_ratio, seeds, sampler, record_heatmap,
-                            heat_bins, fast_capacity_pages, backend)
+                            heat_bins, fast_capacity_pages, backend,
+                            crn=crn, batch_offset=batch_offset)
 
 
 def _resolve_workers(workers, batch: int) -> int:
     if workers in ("auto", 0, None):
         workers = os.cpu_count() or 1
     return max(1, min(int(workers), batch))
+
+
+def run_simulation_cells(cells,
+                         machine: Machine | str = PMEM_LARGE,
+                         fast_slow_ratio: float = 8.0,
+                         seeds=0,
+                         sampler: str = "sparse",
+                         record_heatmap: bool = False,
+                         heat_bins: int = 128,
+                         fast_capacity_pages: Optional[int] = None,
+                         backend: str = "numpy",
+                         crn: bool = False,
+                         workers: int = 1) -> List[List[SimResult]]:
+    """Evaluate many (workload, engine, config-batch) *cells* through one
+    shared work queue.
+
+    ``cells`` is a sequence of ``(workload, engine_name, configs)`` tuples;
+    the return value is one ``List[SimResult]`` per cell, in input order.
+    With ``workers > 1`` every cell is split into config shards and ALL
+    shards across ALL cells are submitted to the process pool at once, so
+    the pool stays saturated even when individual cells are smaller than
+    the worker count (previously each cell was a sequential barrier).
+    Scheduling never changes results — each shard computes exactly what the
+    sequential path would (the jax backend keys its counter-based draws by
+    the GLOBAL batch index, shipped to each shard as ``batch_offset``).
+
+    ``seeds`` is an int (shared by every config of every cell) or one seed
+    sequence per cell (one seed per config).
+    """
+    machine = _as_machine(machine)
+    cells = [(wl, eng, [dict(c) for c in cfgs]) for wl, eng, cfgs in cells]
+    n_cells = len(cells)
+    if n_cells == 0:
+        return []
+    if np.ndim(seeds) == 0:
+        cell_seeds = [[int(seeds)] * len(cfgs) for _, _, cfgs in cells]
+    else:
+        rows = list(seeds)
+        if any(np.ndim(r) == 0 for r in rows):
+            raise ValueError("seeds must be an int or one seed sequence "
+                             "per cell (one seed per config); got a flat "
+                             "sequence — wrap it per cell")
+        cell_seeds = [[int(s) for s in row] for row in rows]
+        if len(cell_seeds) != n_cells or any(
+                len(row) != len(cells[i][2])
+                for i, row in enumerate(cell_seeds)):
+            raise ValueError("seeds must be an int or one seed sequence "
+                             "per cell (one seed per config)")
+    if crn:
+        # the CRN contract is per cell: every row shares the CELL's first
+        # seed.  Collapsing here (before sharding) keeps the shared stream
+        # anchored to the global row 0 even when the batch is split over
+        # workers — otherwise a shard would key off ITS first seed and both
+        # the bitwise-CRN and sharding-invariance guarantees would break.
+        cell_seeds = [[row[0]] * len(row) for row in cell_seeds]
+    total = sum(len(cfgs) for _, _, cfgs in cells)
+    if total == 0:
+        return [[] for _ in range(n_cells)]
+    workers = _resolve_workers(workers, total)
+    if workers > 1 and backend == "jax":
+        # results are identical either way, but each spawned worker re-jits
+        # the epoch loop for its shard shape (seconds per worker) while the
+        # compiled path already parallelizes in-process
+        import logging
+        logging.getLogger(__name__).warning(
+            "sharding a jax-backend batch over %d worker processes re-jits "
+            "per worker; prefer workers=1 with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N", workers)
+    if workers == 1:
+        return [_run_batch_local(wl, eng, cfgs, machine, fast_slow_ratio,
+                                 cell_seeds[i], sampler, record_heatmap,
+                                 heat_bins, fast_capacity_pages, backend,
+                                 crn=crn)
+                for i, (wl, eng, cfgs) in enumerate(cells)]
+
+    from .registry import ENGINES as _ENGINES, SAMPLERS as _SAMPLERS, \
+        WORKLOADS as _WORKLOADS
+    # one flat shard queue across all cells: shard size targets `workers`
+    # equal slices of the TOTAL config count (never crossing a cell), so the
+    # pool saturates even when every cell is smaller than the worker count
+    shard_size = max(1, -(-total // workers))
+    pool = _get_pool(workers)
+    futures = []
+    for ci, (wl, eng, cfgs) in enumerate(cells):
+        wl_spec = (wl.name, wl.input_name, wl.threads, wl.scale, wl.seed)
+        # resolved components travel with the shard so spawn-start workers
+        # can serve names registered outside this module (see _shard_worker)
+        components = (_ENGINES.get(eng), _WORKLOADS.get(wl.name),
+                      _SAMPLERS.get(sampler), BACKENDS.get(backend))
+        for lo in range(0, len(cfgs), shard_size):
+            hi = min(lo + shard_size, len(cfgs))
+            fut = pool.submit(_shard_worker, (
+                wl_spec, components, eng, cfgs[lo:hi], machine,
+                fast_slow_ratio, cell_seeds[ci][lo:hi], sampler,
+                record_heatmap, heat_bins, fast_capacity_pages, backend,
+                crn, lo))
+            futures.append((ci, fut))
+    out: List[List[SimResult]] = [[] for _ in range(n_cells)]
+    for ci, fut in futures:  # shards were submitted in config order per cell
+        out[ci].extend(fut.result())
+    return out
 
 
 def run_simulation_batch(workload: Workload, engine_name: str,
@@ -446,22 +647,31 @@ def run_simulation_batch(workload: Workload, engine_name: str,
                          heat_bins: int = 128,
                          fast_capacity_pages: Optional[int] = None,
                          backend: str = "numpy",
+                         crn: bool = False,
                          workers: int = 1) -> List[SimResult]:
     """Simulate ``workload`` under B candidate configs in one pass.
 
     The workload trace is generated once and shared; engine state carries a
-    leading batch axis.  Per-config RNG streams are seeded from ``seeds``
-    (an int, applied to every config — matching how sequential tuning reuses
-    one scenario seed — or a per-config sequence), so results are numerically
-    identical to B sequential :func:`run_simulation` calls with matched
-    ``seed`` and ``sampler``.  ``sampler="sparse"`` (default) draws the exact
-    Poisson sampling distribution at cost ∝ events; ``"elementwise"``
-    reproduces the historical per-page draws bit-for-bit.  ``workers > 1``
-    (or ``"auto"``) shards the batch over a persistent process pool;
-    sharding never changes results, only wall time.
+    leading batch axis.  With the default ``backend="numpy"``, per-config
+    RNG streams are seeded from ``seeds`` (an int, applied to every config —
+    matching how sequential tuning reuses one scenario seed — or a
+    per-config sequence), so results are numerically identical to B
+    sequential :func:`run_simulation` calls with matched ``seed`` and
+    ``sampler`` — the numpy path is the bit-exact reference.
+    ``backend="jax"`` compiles the whole epoch loop (engines + samplers +
+    cost model) into one jitted ``lax.scan`` with counter-based monitoring
+    draws — equal in distribution, not stream-compatible; see
+    :mod:`repro.core.engine_jax`.  ``crn=True`` (jax only) shares the
+    monitoring noise bitwise across all B configs (common random numbers)
+    so within-batch comparisons see identical noise.
+
+    ``sampler="sparse"`` (default) draws the exact Poisson sampling
+    distribution at cost ∝ events; ``"elementwise"`` reproduces the
+    historical per-page draws bit-for-bit.  ``workers > 1`` (or ``"auto"``)
+    shards the batch over a persistent process pool; sharding never changes
+    results, only wall time.
     """
-    machine = _as_machine(machine)
-    configs = [dict(c) for c in configs]
+    configs = list(configs)
     B = len(configs)
     if B == 0:
         return []
@@ -470,35 +680,10 @@ def run_simulation_batch(workload: Workload, engine_name: str,
     seeds = [int(s) for s in seeds]
     if len(seeds) != B:
         raise ValueError("seeds must be an int or one seed per config")
-    workers = _resolve_workers(workers, B)
-    if workers == 1:
-        return _run_batch_local(workload, engine_name, configs, machine,
-                                fast_slow_ratio, seeds, sampler,
-                                record_heatmap, heat_bins,
-                                fast_capacity_pages, backend)
-    wl_spec = (workload.name, workload.input_name, workload.threads,
-               workload.scale, workload.seed)
-    # resolved components travel with the shard so spawn-start workers can
-    # serve names registered outside this module (see _shard_worker)
-    from .registry import ENGINES as _ENGINES, SAMPLERS as _SAMPLERS, \
-        WORKLOADS as _WORKLOADS
-    components = (_ENGINES.get(engine_name), _WORKLOADS.get(workload.name),
-                  _SAMPLERS.get(sampler), BACKENDS.get(backend))
-    bounds = np.linspace(0, B, workers + 1).astype(int)
-    pool = _get_pool(workers)
-    futures = []
-    for w in range(workers):
-        lo, hi = int(bounds[w]), int(bounds[w + 1])
-        if lo == hi:
-            continue
-        futures.append(pool.submit(_shard_worker, (
-            wl_spec, components, engine_name, configs[lo:hi], machine,
-            fast_slow_ratio, seeds[lo:hi], sampler, record_heatmap,
-            heat_bins, fast_capacity_pages, backend)))
-    out: List[SimResult] = []
-    for f in futures:
-        out.extend(f.result())
-    return out
+    return run_simulation_cells(
+        [(workload, engine_name, configs)], machine, fast_slow_ratio,
+        [seeds], sampler, record_heatmap, heat_bins, fast_capacity_pages,
+        backend, crn, workers)[0]
 
 
 def run_simulation(workload: Workload, engine_name: str,

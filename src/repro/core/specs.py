@@ -131,12 +131,22 @@ class SimOptions:
     scattered across four signatures (``evaluate``, ``evaluate_batch``,
     ``run_simulation``, ``tune_scenario``).  ``workers`` accepts an int or
     ``"auto"`` (process pool sized to the CPU count).
+
+    ``crn=True`` (common random numbers) makes every config of a batch see
+    bitwise-identical monitoring noise, so within-batch comparisons —
+    SMAC's ``ask_batch`` candidates in particular — are paired rather than
+    independently noisy.  CRN requires ``backend="jax"`` (the compiled
+    epoch loop draws counter-based randomness that can be shared across
+    the batch; the numpy reference engines consume sequential RNG streams
+    that cannot).  Use it for *tuning/comparison* runs; leave it off when
+    estimating absolute performance from independent replicas.
     """
 
     seed: int = 0
     sampler: str = "elementwise"
     workers: Union[int, str] = 1
     backend: str = "numpy"
+    crn: bool = False
     record_heatmap: bool = False
     heat_bins: int = 128
 
@@ -145,6 +155,11 @@ class SimOptions:
         BACKENDS.get(self.backend)
         if self.workers not in ("auto", None) and int(self.workers) < 0:
             raise ValueError(f"workers must be >= 0, got {self.workers!r}")
+        if self.crn and self.backend != "jax":
+            raise ValueError(
+                "crn=True (common random numbers) requires backend='jax'; "
+                "the numpy engines consume sequential RNG streams that "
+                "cannot be shared across a batch")
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)

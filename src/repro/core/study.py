@@ -43,7 +43,8 @@ from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple,
 
 from .bo.tuner import TuningResult, TuningSession
 from .knobs import Config, KnobSpace
-from .simulator import Machine, SimResult, get_machine, run_simulation_batch
+from .simulator import (Machine, SimResult, get_machine,
+                        run_simulation_batch, run_simulation_cells)
 from .specs import EngineSpec, ExperimentSpec, SimOptions, WorkloadSpec
 from .workloads import Workload, make_workload
 
@@ -137,7 +138,7 @@ class Study:
             sampler=opts.sampler, record_heatmap=opts.record_heatmap,
             heat_bins=opts.heat_bins,
             fast_capacity_pages=self.spec.fast_capacity_pages,
-            backend=opts.backend, workers=opts.workers)
+            backend=opts.backend, crn=opts.crn, workers=opts.workers)
         return results[0] if configs is None else results
 
     # -- tune --------------------------------------------------------------
@@ -151,7 +152,13 @@ class Study:
         ``spec.options.seed`` (matching how the legacy ``tune_scenario``
         reused one scenario seed across evaluations).  ``batch_size=q > 1``
         evaluates each optimizer round as one vectorized simulator pass
-        honouring ``spec.options`` (sampler/workers/backend).
+        honouring ``spec.options`` (sampler/workers/backend).  With
+        ``spec.options.crn`` set, every candidate is evaluated under common
+        random numbers — the compiled backend's counter-based noise is
+        shared bitwise across the whole run, so all comparisons the
+        optimizer makes are paired — and ``tell_batch(crn=True)`` debiases
+        any re-evaluated config against its recorded value (see
+        :meth:`~repro.core.bo.smac.SMACOptimizer.tell_batch`).
         """
         def objective(config: Config) -> float:
             return self.run(configs=[config])[0].total_s
@@ -163,7 +170,8 @@ class Study:
             self.spec.engine.name, objective, scenario_key=self.key,
             space=space, optimizer=optimizer, budget=budget, seed=seed,
             n_init=n_init, random_prob=random_prob, batch_size=batch_size,
-            objective_batch=objective_batch if batch_size > 1 else None)
+            objective_batch=objective_batch if batch_size > 1 else None,
+            crn=self.spec.options.crn)
         return session.run(verbose=verbose)
 
     # -- sweep -------------------------------------------------------------
@@ -179,10 +187,14 @@ class Study:
         to the spec's engine/workload; bare workload *names* inherit the
         spec's threads and scale (pass full ``WorkloadSpec``s to vary them).  ``configs`` (shared across engines)
         defaults to each engine spec's own config, so ``sweep(engines=[...],
-        workloads=[...])`` compares engines at their spec'd settings.  Each
-        (engine, workload) cell evaluates its whole config batch through one
-        shared trace via :func:`~repro.core.simulator.run_simulation_batch`
-        — nothing is evaluated sequentially per config.
+        workloads=[...])`` compares engines at their spec'd settings.
+
+        All (engine, workload) cells are submitted to ONE shared work queue
+        (:func:`~repro.core.simulator.run_simulation_cells`): with
+        ``workers > 1`` the process pool schedules config shards across
+        cells, so it stays saturated even when individual cells are smaller
+        than the worker count — nothing is evaluated sequentially per
+        config and there is no per-cell barrier.
         """
         grid = dict(grid or {})
         engines = engines if engines is not None else grid.get("engines")
@@ -209,18 +221,22 @@ class Study:
                   else f"{w.key}#t{w.threads}/s{w.scale}" for w in wspcs]
         if len(set(labels)) != len(labels):
             raise ValueError(f"duplicate workload specs in sweep: {labels}")
-        out = SweepResult()
+        cell_keys = []
+        cells = []
         for ws, wlabel in zip(wspcs, labels):
             wl = self.workload(ws)
             for es in espcs:
                 batch = [dict(c) for c in configs] if configs is not None \
                     else [es.config]
-                out.cells[(es.name, wlabel)] = run_simulation_batch(
-                    wl, es.name, batch, self.machine,
-                    fast_slow_ratio=self.spec.fast_slow_ratio,
-                    seeds=opts.seed, sampler=opts.sampler,
-                    record_heatmap=opts.record_heatmap,
-                    heat_bins=opts.heat_bins,
-                    fast_capacity_pages=self.spec.fast_capacity_pages,
-                    backend=opts.backend, workers=opts.workers)
+                cell_keys.append((es.name, wlabel))
+                cells.append((wl, es.name, batch))
+        results = run_simulation_cells(
+            cells, self.machine, fast_slow_ratio=self.spec.fast_slow_ratio,
+            seeds=opts.seed, sampler=opts.sampler,
+            record_heatmap=opts.record_heatmap, heat_bins=opts.heat_bins,
+            fast_capacity_pages=self.spec.fast_capacity_pages,
+            backend=opts.backend, crn=opts.crn, workers=opts.workers)
+        out = SweepResult()
+        for key, res in zip(cell_keys, results):
+            out.cells[key] = res
         return out

@@ -84,7 +84,12 @@ def test_batch_sharding_invariance():
 
 
 def test_batch_jax_backend_matches_numpy():
-    """The vmapped access-cost math agrees with the numpy path."""
+    """backend="jax" (the compiled epoch loop) tracks the numpy reference.
+
+    Since PR 3 the jax backend compiles engines + samplers end-to-end with
+    counter-based draws, so parity on sampled engines is statistical —
+    the strict contract lives in tests/test_jax_backend.py.
+    """
     pytest.importorskip("jax")
     wl = make_workload("xsbench", "", threads=8, scale=0.04, seed=4)
     cfgs = _configs_for("hemem", 2)
@@ -92,9 +97,7 @@ def test_batch_jax_backend_matches_numpy():
     b = run_simulation_batch(wl, "hemem", cfgs, "pmem-large", seeds=5,
                              backend="jax")
     for ra, rb in zip(a, b):
-        # jax defaults to float32: allow small numerical slack
-        assert np.allclose(ra.epoch_wall_ms, rb.epoch_wall_ms, rtol=2e-3)
-        assert abs(ra.total_s - rb.total_s) / ra.total_s < 2e-3
+        assert abs(ra.total_s - rb.total_s) / ra.total_s < 0.2
 
 
 def test_sparse_sampler_distribution():

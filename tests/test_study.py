@@ -101,6 +101,42 @@ def test_sweep_grid_matches_individual_runs():
     assert totals[("oracle", "gups")][0] <= totals[("static", "gups")][0]
 
 
+def test_sweep_cross_cell_scheduler_matches_sequential():
+    """With workers > 1 the sweep flattens all cells into one shard queue;
+    scheduling must never change results, even when every cell is smaller
+    than the worker count."""
+    import os
+    if (os.cpu_count() or 1) < 2:
+        pytest.skip("needs >= 2 CPUs")
+    study_seq = Study(_spec(seed=4, sampler="sparse"))
+    study_par = Study(_spec(seed=4, sampler="sparse", workers=2))
+    kw = dict(engines=["static", "hemem"], workloads=["gups", "xsbench"])
+    seq = study_seq.sweep(**kw)
+    par = study_par.sweep(**kw)
+    assert set(seq.cells) == set(par.cells)
+    for key in seq.cells:
+        for a, b in zip(seq[key], par[key]):
+            assert a.total_s == b.total_s
+            np.testing.assert_array_equal(a.epoch_wall_ms, b.epoch_wall_ms)
+
+
+def test_run_simulation_cells_orders_and_seeds():
+    from repro.core.simulator import run_simulation_cells
+    from repro.core.workloads import make_workload
+    wl = make_workload("gups", "", threads=8, scale=SCALE, seed=3)
+    cfgs = [get_space("hemem").default_config()]
+    out = run_simulation_cells([(wl, "static", [{}, {}]),
+                                (wl, "hemem", cfgs)], seeds=3)
+    assert [len(c) for c in out] == [2, 1]
+    assert out[1][0].engine == "hemem"
+    ref = Study(ExperimentSpec(
+        engine="hemem", workload=WorkloadSpec("gups", threads=8, scale=SCALE),
+        options=SimOptions(seed=3, sampler="sparse"))).run()
+    assert out[1][0].total_s == ref.total_s
+    with pytest.raises(ValueError, match="seeds"):
+        run_simulation_cells([(wl, "static", [{}])], seeds=[[1, 2]])
+
+
 def test_sweep_shared_configs_across_engines():
     study = Study(_spec())
     cfgs = [get_space("hemem").default_config(),
