@@ -20,11 +20,20 @@ numbers (plus a CRN bitwise check) in ``BENCH_backend.json`` (repo root and
 tuning run.  ``--smoke`` runs only a tiny jitted HeMem evaluation + parity
 check (the CI fail-fast job).
 
+``--backend jax`` also runs the **selection ablation**: migration-plan
+top-k selection via the exact Pallas kernel (``pallas``, interpret mode on
+CPU), its pure-jnp ref (``ref``, the CPU default), and the historical
+8-bit log-quantized approximation (``quantized``), recording per-call
+selection wall-clock, end-to-end evaluation wall-clock and cross-mode
+parity under ``select_ablation`` in ``BENCH_backend.json`` — the receipts
+for what exact selection costs.  ``--select MODE`` additionally pins that
+implementation for the batched tuning run itself.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.batched_tuning [--quick]
         [--budget N] [--batch-size Q] [--workers N|auto] [--seed S]
-        [--backend numpy|jax] [--smoke]
+        [--backend numpy|jax] [--select pallas|ref|quantized] [--smoke]
 """
 
 from __future__ import annotations
@@ -101,6 +110,112 @@ def _time_pair(wl, cfgs, reps: int):
     return float(min(t_np)), float(min(t_jx))
 
 
+def _select_mode_env(mode: str):
+    """(kernels FORCE value, exact_select flag) pinning one selection
+    implementation."""
+    return (None, False) if mode == "quantized" else (mode, True)
+
+
+def _select_microbench(modes, n_pages: int, reps: int, B: int = 8):
+    """Per-call wall-clock (ms) of one jitted migration-plan selection at
+    the evaluation's (B, n_pages) shape, per mode.  Reps are interleaved
+    across modes (same throttle windows) and min-of-N (robust to noisy
+    neighbours), like :func:`_time_pair`."""
+    import functools
+    import jax
+    from repro.core import engine_jax
+    engine_jax.have_jax()
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    heat = jnp.asarray(rng.gamma(0.3, 50.0, (B, n_pages)).astype(np.float32))
+    p_mask = jnp.asarray(rng.uniform(size=(B, n_pages)) < 0.2)
+    d_mask = jnp.asarray(rng.uniform(size=(B, n_pages)) < 0.5)
+    k = jnp.asarray(np.full(B, n_pages // 20, np.float32))
+    fns = {m: jax.jit(functools.partial(engine_jax.select_top, mode=m))
+           for m in modes}
+    for fn in fns.values():  # compile outside the timed region
+        jax.block_until_ready(fn(p_mask, heat, d_mask, heat, k, k))
+    times = {m: [] for m in modes}
+    for _ in range(max(reps, 5)):
+        for m, fn in fns.items():
+            t0 = time.time()
+            jax.block_until_ready(fn(p_mask, heat, d_mask, heat, k, k))
+            times[m].append(time.time() - t0)
+    return {m: float(min(t)) * 1e3 for m, t in times.items()}
+
+
+def select_ablation(quick: bool = False) -> dict:
+    """--select ablation: exact Pallas kernel vs its pure-jnp ref vs the
+    log-quantized approximation, on the batch-8 HeMem/GUPS headline —
+    selection-only and end-to-end wall clock plus cross-mode parity.
+    All modes are timed interleaved rep by rep so they sample the same
+    throttle windows (see :func:`_time_pair`)."""
+    from repro.kernels import ops as kernel_ops
+    cfgs = _hemem_batch(8)
+    scale = 0.25
+    wl = make_workload("gups", "8GiB-hot", threads=12, scale=scale, seed=0)
+    reps = 3 if quick else 6
+    modes = ("quantized", "ref", "pallas")
+    totals = {}
+    compiles = {}
+    walls = {m: [] for m in modes}
+    old_force = kernel_ops.FORCE
+
+    def _eval(mode):
+        force, exact = _select_mode_env(mode)
+        kernel_ops.FORCE = force
+        return run_simulation_batch(
+            wl, "hemem", cfgs, "pmem-large", seeds=0, sampler="sparse",
+            backend="jax", exact_select=exact)
+
+    try:
+        for mode in modes:  # compile each mode outside the timed region
+            t0 = time.time()
+            totals[mode] = np.array([r.total_s for r in _eval(mode)])
+            compiles[mode] = time.time() - t0
+        for _ in range(reps):  # interleaved: same throttle windows
+            for mode in modes:
+                t0 = time.time()
+                _eval(mode)
+                walls[mode].append(time.time() - t0)
+        sel_ms = _select_microbench(modes, wl.n_pages, reps)
+    finally:
+        kernel_ops.FORCE = old_force
+    rows = {mode: {"wall_s": float(min(walls[mode])),
+                   "compile_s": float(compiles[mode]),
+                   "select_ms_per_call": sel_ms[mode]}
+            for mode in modes}
+    for mode in modes:
+        print(f"  select={mode:9s}: eval {rows[mode]['wall_s']:.3f}s | "
+              f"selection {rows[mode]['select_ms_per_call']:.2f} ms/call",
+              flush=True)
+    exact_bitwise = bool(np.array_equal(totals["ref"], totals["pallas"]))
+    quant_rel = float(np.max(np.abs(totals["quantized"] - totals["ref"])
+                             / totals["ref"]))
+    overhead = rows["ref"]["wall_s"] / rows["quantized"]["wall_s"] - 1.0
+    out = {
+        "scale": scale, "n_pages": wl.n_pages, "batch": len(cfgs),
+        "modes": rows,
+        "exact_pallas_vs_ref_bitwise": exact_bitwise,
+        "quantized_vs_exact_total_s_rel": quant_rel,
+        "exact_end_to_end_overhead_pct": overhead * 100.0,
+        "claims": [
+            claim("exact selection: pallas and ref dispatch agree bitwise "
+                  "(batch-8 HeMem end-to-end)", exact_bitwise,
+                  f"total_s identical across {len(cfgs)} configs"),
+            claim("exact selection end-to-end cost is recorded and small",
+                  overhead < 0.25,
+                  f"exact(ref) is {overhead * 100:+.1f}% vs quantized; "
+                  f"selection {rows['ref']['select_ms_per_call']:.2f} vs "
+                  f"{rows['quantized']['select_ms_per_call']:.2f} ms/call "
+                  f"(pallas-interpret: "
+                  f"{rows['pallas']['select_ms_per_call']:.2f})"),
+        ],
+    }
+    print_claims(out["claims"])
+    return out
+
+
 def backend_bench(quick: bool = False) -> dict:
     """Numpy-vs-jax wall clock for a batch-8 HeMem evaluation on GUPS,
     recorded in BENCH_backend.json (acceptance target: >= 3x post-compile).
@@ -134,6 +249,10 @@ def backend_bench(quick: bool = False) -> dict:
     crn_ok = all(np.array_equal(crn[0].epoch_wall_ms, r.epoch_wall_ms)
                  for r in crn[1:])
 
+    print("selection ablation (--select: pallas | ref | quantized):",
+          flush=True)
+    ablation = select_ablation(quick=quick)
+
     best = max(r["speedup_x"] for r in rows)
     out = {
         "engine": "hemem", "workload": "gups:8GiB-hot",
@@ -141,15 +260,16 @@ def backend_bench(quick: bool = False) -> dict:
         "evaluations": rows,
         "best_speedup_x": best,
         "crn_bitwise_identical": bool(crn_ok),
+        "select_ablation": ablation,
     }
     out["claims"] = [
         claim("jax backend >= 3x over numpy (batch-8 HeMem on GUPS, "
-              "post-compile)", best >= 3.0,
+              "post-compile, exact selection)", best >= 3.0,
               f"best {best:.2f}x across scales "
               f"{[r['scale'] for r in rows]}"),
         claim("crn=True draws are bitwise-identical across the batch",
               crn_ok, "epoch walls equal across 3 identical configs"),
-    ]
+    ] + ablation["claims"]
     print_claims(out["claims"])
     save("BENCH_backend", out)
     # the acceptance artifact also lives at the repo root
@@ -181,12 +301,18 @@ def smoke() -> dict:
 
 
 def run(quick: bool = False, budget: int = None, batch_size: int = None,
-        workers="auto", seed: int = 0, backend: str = "numpy") -> dict:
+        workers="auto", seed: int = 0, backend: str = "numpy",
+        select: str = None) -> dict:
     budget = budget if budget is not None else (12 if quick else 32)
     batch_size = batch_size if batch_size is not None else (4 if quick else 8)
+    exact_select = True
+    if select is not None and backend != "jax":
+        raise SystemExit("--select only applies to --backend jax "
+                         "(the numpy reference is always exact)")
 
     print(f"GUPS/hemem, budget={budget}, batch_size={batch_size}, "
-          f"workers={workers}, backend={backend}", flush=True)
+          f"workers={workers}, backend={backend}"
+          + (f", select={select}" if select else ""), flush=True)
 
     out = {}
     if backend == "jax":
@@ -194,13 +320,21 @@ def run(quick: bool = False, budget: int = None, batch_size: int = None,
               flush=True)
         out["backend_bench"] = backend_bench(quick=quick)
 
+    if select is not None:
+        # pin the selection implementation for the TUNING run only — the
+        # backend benchmark + ablation above always measure the default
+        # dispatch and all three modes respectively
+        force, exact_select = _select_mode_env(select)
+        from repro.kernels import ops as kernel_ops
+        kernel_ops.FORCE = force
+
     wspec = WorkloadSpec("gups", "8GiB-hot")
 
     def _study(sampler, wk, be):
         return Study(ExperimentSpec(
             engine="hemem", workload=wspec, machine="pmem-large",
             options=SimOptions(seed=seed, sampler=sampler, workers=wk,
-                               backend=be)))
+                               backend=be, exact_select=exact_select)))
 
     # warm the persistent shard pool (one-time process spinup) so the timed
     # comparison measures steady-state throughput
@@ -243,6 +377,7 @@ def run(quick: bool = False, budget: int = None, batch_size: int = None,
     out.update({
         "budget": budget, "batch_size": batch_size,
         "workers": str(eff_workers), "backend": backend,
+        "select": select or ("exact" if backend == "jax" else "n/a"),
         "wall_sequential_s": t_seq, "wall_batched_s": t_bat,
         "speedup_x": speedup,
         "best_sequential_s": seq.best_value, "best_batched_s": bat.best_value,
@@ -292,8 +427,13 @@ def main() -> None:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                    help="evaluation backend for the batched tuning run; "
-                   "'jax' also runs the backend comparison and writes "
-                   "BENCH_backend.json")
+                   "'jax' also runs the backend comparison + selection "
+                   "ablation and writes BENCH_backend.json")
+    p.add_argument("--select", choices=("pallas", "ref", "quantized"),
+                   default=None,
+                   help="pin the migration-plan selection implementation "
+                   "for the jax tuning run (the ablation section always "
+                   "measures all three)")
     p.add_argument("--smoke", action="store_true",
                    help="CI fail-fast: one jitted HeMem evaluation only")
     args = p.parse_args()
@@ -301,7 +441,8 @@ def main() -> None:
         smoke()
         return
     run(quick=args.quick, budget=args.budget, batch_size=args.batch_size,
-        workers=args.workers, seed=args.seed, backend=args.backend)
+        workers=args.workers, seed=args.seed, backend=args.backend,
+        select=args.select)
 
 
 if __name__ == "__main__":

@@ -2,12 +2,16 @@
 
 Paper claims: the best configuration for one input usually does NOT perform
 well on the other input (often worse than default).
+
+Ported to the typed Study API (continuing the PR 3 migration): one Study
+per (workload, input), tuned with batched SMAC rounds (``batch_size=4``,
+process-pool sharded); the transfer evaluations reuse the destination
+input's Study so its cached workload trace serves both directions.
 """
 
 from __future__ import annotations
 
-from repro.core.simulator import Scenario
-from repro.core.bo.tuner import tune_scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 
 from .common import budget, claim, print_claims, save
 
@@ -16,6 +20,14 @@ PAIRS = [
     ("gapbs-pr", "kron", "twitter"),
     ("silo", "ycsb-c", "tpc-c"),
 ]
+
+BATCH_SIZE = 4
+
+
+def _study(wname: str, inp: str) -> Study:
+    return Study(ExperimentSpec(
+        engine="hemem", workload=WorkloadSpec(wname, inp),
+        options=SimOptions(sampler="sparse", workers="auto")))
 
 
 def run(quick: bool = False) -> dict:
@@ -26,17 +38,20 @@ def run(quick: bool = False) -> dict:
     for wname, in_a, in_b in PAIRS:
         entry = {}
         results = {}
+        studies = {}
         for inp in (in_a, in_b):
-            sc = Scenario(wname, inp)
-            res = tune_scenario("hemem", sc, budget=budget(quick), seed=11)
+            studies[inp] = _study(wname, inp)
+            res = studies[inp].tune(budget=budget(quick),
+                                    batch_size=BATCH_SIZE, seed=11)
             results[inp] = res
-            entry[inp] = {"default_s": res.default_value,
+            entry[inp] = {"spec": studies[inp].spec.to_dict(),
+                          "default_s": res.default_value,
                           "best_s": res.best_value,
                           "improvement": res.improvement}
         # transfer: run each best config on the OTHER input
         for src, dst in ((in_a, in_b), (in_b, in_a)):
-            f_dst = Scenario(wname, dst).objective("hemem")
-            transfer_s = f_dst(results[src].best.config)
+            transfer_s = studies[dst].run(
+                configs=[results[src].best.config])[0].total_s
             rel_to_best = transfer_s / results[dst].best_value
             rel_to_default = transfer_s / results[dst].default_value
             entry[f"{src}->{dst}"] = {

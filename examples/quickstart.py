@@ -15,6 +15,13 @@ identical monitoring noise::
     PYTHONPATH=src python examples/quickstart.py --batch-size 8 \\
         --backend jax --crn
 
+The jax backend plans migrations with the **exact** top-k selection kernel
+(``repro.kernels.select_topk``; bit-identical page sets to the numpy
+reference's stable sorts) — ``SimOptions(exact_select=False)`` keeps the
+historical log-quantized approximation for ablations, and
+``python -m benchmarks.batched_tuning --backend jax --select
+{pallas,quantized,ref}`` measures what exactness costs.
+
 The experiment is fully described by one JSON-round-trippable
 ``ExperimentSpec``; see ``examples/legacy_quickstart.py`` for the
 deprecated pre-PR-2 call pattern.

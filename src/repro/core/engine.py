@@ -43,9 +43,13 @@ samplers equal in distribution).  ``backend="jax"`` swaps in the *compiled*
 re-implementation of the same five engines (:mod:`repro.core.engine_jax`):
 pure-functional state transitions driven by one jitted ``lax.scan`` over
 epochs, with counter-based monitoring draws — equal in distribution but not
-stream-compatible, so cross-backend comparisons are statistical.  Changes to
-the migration/classification logic here must be mirrored there (the parity
-tests in ``tests/test_jax_backend.py`` pin the two together).
+stream-compatible, so cross-backend comparisons are statistical for the
+sampled engines; migration-plan *selection* itself is exact (the
+``repro.kernels.select_topk`` kernel reproduces this module's stable sorts
+bit-for-bit).  Changes to the migration/classification logic here must be
+mirrored there (the parity tests in ``tests/test_jax_backend.py`` and the
+selection conformance suite in ``tests/test_select_topk.py`` pin the two
+together).
 
 Engines and samplers are looked up through :mod:`repro.core.registry`
 (``@register_engine`` / ``register_sampler``), so new policies plug into

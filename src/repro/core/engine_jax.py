@@ -32,14 +32,16 @@ Performance notes (what made the compiled loop beat the numpy reference):
   an XLA CPU epoch).
 * Migration-candidate selection avoids dense stable argsorts (the dominant
   cost of a naive port: ~13 ms per (8, 8k) argsort on CPU).
-  :func:`select_top` log-quantizes candidate priorities, finds each side's
-  exact cutoff tier with a dual bitwise binary search (dot-product counts
-  — XLA CPU's GEMV is vectorized where its predicate reductions are not),
-  and resolves the cutoff tier in page-index order with one blocked
-  GEMM prefix-sum.  Selection *counts* are exact; only the order among
-  pages whose priority collides within the quantization differs from the
-  reference (ties break by page index, as in the reference's stable
-  sorts).
+  :func:`select_top` dispatches to the exact top-k selection kernel
+  (:mod:`repro.kernels.select_topk` on TPU / under ``FORCE="pallas"``,
+  its pure-jnp oracle :func:`repro.kernels.ref.select_topk_ref`
+  otherwise): a radix-select over the full (priority, index) key — dual
+  bitwise cutoff search on order-preserving float bits plus an index-order
+  boundary fill — whose selected index sets are **bit-identical** to the
+  reference's stable sorts.  ``SimOptions(exact_select=False)`` restores
+  the historical 8-bit log-quantized approximation
+  (:func:`select_top_quantized`: exact counts, near-exact order) for
+  ablations.
 * DAMON's region probes reduce to ``Binomial(K, p̄)`` drawn as K masked
   Bernoullis — exactly the distribution of the numpy Monte-Carlo probe
   loop, for both sampler spellings.
@@ -229,8 +231,43 @@ def monitor_draw2(keys, epoch, reads, writes, sp, wsp):
 
 
 # ---------------------------------------------------------------------------
-# Exact-count top-k selection: dual bitwise cutoff search over log-quantized
-# priorities + one blocked prefix-sum for the cutoff tiers (see select_top).
+# Migration-plan top-k selection.  select_top() dispatches between the exact
+# (priority, index) radix-select kernel (repro.kernels.select_topk / its
+# pure-jnp ref — bit-exact vs the numpy stable sorts) and the historical
+# 8-bit log-quantized approximation kept for ablations
+# (select_top_quantized: exact counts, near-exact order).
+# ---------------------------------------------------------------------------
+#: selection implementations select_top() can dispatch to
+SELECT_MODES = ("pallas", "ref", "quantized")
+
+
+def select_top(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote,
+               mode: "str | None" = None):
+    """Top-``n_promote`` (by ``p_heat`` desc) and top-``n_demote`` (by
+    ``d_heat`` asc) selection masks for a ``(B, n)`` batch.
+
+    ``mode`` picks the implementation: ``"pallas"`` (the Pallas kernel,
+    interpret mode off-TPU), ``"ref"`` (its pure-jnp oracle) — both
+    bit-exact against the numpy reference's stable sorts, ties by page
+    index — or ``"quantized"`` (the historical 8-bit log-quantized
+    approximation; exact counts only).  ``None`` resolves through
+    :func:`repro.kernels.ops.select_path`, honouring the kernels layer's
+    ``FORCE`` switch.
+    """
+    if mode == "quantized":
+        return select_top_quantized(p_mask, p_heat, d_mask, d_heat,
+                                    n_promote, n_demote)
+    if mode in (None, "pallas", "ref"):
+        from ..kernels import ops as kernel_ops
+        return kernel_ops.select_topk(p_mask, p_heat, d_mask, d_heat,
+                                      n_promote, n_demote, mode=mode)
+    raise ValueError(f"unknown selection mode {mode!r}; "
+                     f"expected one of {SELECT_MODES}")
+
+
+# ---------------------------------------------------------------------------
+# Quantized selection (ablation path): dual bitwise cutoff search over
+# log-quantized priorities + one blocked prefix-sum for the cutoff tiers.
 # ---------------------------------------------------------------------------
 def _quantize(heat, qbits: int):
     """Per-row LOG-scale quantization of nonnegative priorities into
@@ -284,9 +321,10 @@ def _count_ge(v, t, ones):
     return (v >= t).astype(jnp.float32) @ ones
 
 
-def select_top(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote):
-    """Exact-count top-``n_promote`` (by ``p_heat`` desc) and
-    top-``n_demote`` (by ``d_heat`` asc) masks, without a dense sort.
+def select_top_quantized(p_mask, p_heat, d_mask, d_heat, n_promote,
+                         n_demote):
+    """Approximate top-k selection masks over log-quantized priorities —
+    the ablation path behind ``SimOptions(exact_select=False)``.
 
     Priorities quantize to :data:`_SEL_QBITS` bits; a dual bitwise binary
     search finds each side's cutoff priority (the k-th best), and one
@@ -294,9 +332,9 @@ def select_top(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote):
     page-index order.  Selection *counts* are therefore exact (capacity and
     rate caps hold precisely); only the order among pages whose priority
     collides within the quantization differs from the reference's stable
-    sorts (ties there break by page index too).  This replaces two stable
-    (B, n) argsorts — the dominant cost of a naive port — with ~9 fused
-    compare-count passes and one blocked cumsum.
+    sorts (ties there break by page index too).  ~9 fused compare-count
+    passes and one blocked cumsum; the exact kernel replaces this as the
+    default (see :func:`select_top`).
     """
     n = p_mask.shape[-1]
     ones = jnp.ones(n, jnp.float32)
@@ -402,9 +440,16 @@ class _EngineDef:
     zero_cost = False
     plans = True
 
-    def __init__(self, B, n, fast_cap, sampler):
+    def __init__(self, B, n, fast_cap, sampler, select_mode: str = "ref"):
         self.B, self.n, self.fast_cap, self.sampler = B, n, fast_cap, sampler
+        self.select_mode = select_mode
         self.page_bytes = np.float32(2 ** 21)  # overwritten by the driver
+
+    def select(self, p_mask, p_heat, d_mask, d_heat, n_promote, n_demote):
+        """Migration-plan top-k selection under this engine's configured
+        implementation (see :func:`select_top`)."""
+        return select_top(p_mask, p_heat, d_mask, d_heat, n_promote,
+                          n_demote, mode=self.select_mode)
 
     def knobs(self, configs) -> Dict[str, np.ndarray]:
         return {"rate": _knob_vec(configs, "max_migration_rate", default=1e9)}
@@ -438,8 +483,8 @@ class _OracleDef(_EngineDef):
         # want = the `cap` hottest allocated pages (ties by index)
         heat_b = jnp.broadcast_to(heat[None, :], (self.B, self.n))
         none = jnp.zeros((self.B, self.n), bool)
-        want, _ = select_top(alloc, heat_b, none, heat_b,
-                             cap, jnp.zeros(self.B))
+        want, _ = self.select(alloc, heat_b, none, heat_b,
+                              cap.astype(jnp.float32), jnp.zeros(self.B))
         prom_c = want & ~in_fast
         dem_c = ~want & in_fast
         free = self.fast_cap - in_fast.sum(axis=1)
@@ -541,8 +586,8 @@ class _HeMemDef(_EngineDef):
         n_p2, n_d2 = _truncate_to_rate(n_promote, n_d, room,
                                        jnp.maximum(0.0, rate_pages))
         gate = run_row.astype(jnp.float32)
-        pmask, dmask = select_top(cand_p, heat, cand_d, heat,
-                                  n_p2 * gate, n_d2 * gate)
+        pmask, dmask = self.select(cand_p, heat, cand_d, heat,
+                                   n_p2 * gate, n_d2 * gate)
         return st, pmask, dmask, jnp.zeros(self.B, dtype=jnp.float32)
 
 
@@ -608,8 +653,8 @@ class _MemtisDef(_EngineDef):
         n_promote = jnp.minimum(n_p.astype(jnp.float32), room + n_d)
         n_p2, n_d2 = _truncate_to_rate(n_promote, n_d, room, rate_pages)
         gate = run_row.astype(jnp.float32)
-        pmask, dmask = select_top(cand_p, heat, cand_d, heat,
-                                  n_p2 * gate, n_d2 * gate)
+        pmask, dmask = self.select(cand_p, heat, cand_d, heat,
+                                   n_p2 * gate, n_d2 * gate)
         overhead = jnp.where(
             run_row,
             (pmask.sum(axis=1) + dmask.sum(axis=1)).astype(jnp.float32)
@@ -720,8 +765,8 @@ class _HMSDKDef(_EngineDef):
         n_promote = jnp.minimum(n_p.astype(jnp.float32), room + n_d)
         n_p2, n_d2 = _truncate_to_rate(n_promote, n_d, room, rate_pages)
         gate = run_row.astype(jnp.float32)
-        pmask, dmask = select_top(cand_p, est_p, cand_d, key_d,
-                                  n_p2 * gate, n_d2 * gate)
+        pmask, dmask = self.select(cand_p, est_p, cand_d, key_d,
+                                   n_p2 * gate, n_d2 * gate)
         return st, pmask, dmask, jnp.zeros(self.B, dtype=jnp.float32)
 
 
@@ -821,8 +866,8 @@ def _build_step(edef: "_EngineDef", const, page_bytes, scale,
 
 
 def _build_run_fn(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
-                  page_bytes, record_placement):
-    edef = _ENGINE_DEFS[engine_name](B, n, fast_cap, sampler)
+                  page_bytes, record_placement, select_mode="ref"):
+    edef = _ENGINE_DEFS[engine_name](B, n, fast_cap, sampler, select_mode)
 
     def run(kv, keys, reads_t, writes_t, const, est0):
         step = _build_step(edef, const, page_bytes, scale, record_placement)
@@ -852,11 +897,11 @@ def _n_devices() -> int:
 
 
 def _get_compiled(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
-                  page_bytes, record_placement):
+                  page_bytes, record_placement, select_mode):
     ndev = _n_devices()
     pmapped = ndev > 1 and B % ndev == 0 and B >= ndev
     key = (engine_name, n, sampler, B, n_epochs, fast_cap, float(scale),
-           int(page_bytes), bool(record_placement), pmapped)
+           int(page_bytes), bool(record_placement), pmapped, select_mode)
     hit = _COMPILED.get(key)
     if hit is not None:
         return hit
@@ -864,8 +909,9 @@ def _get_compiled(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
     if any(k[:3] == prefix for k in _COMPILED):
         log.warning(
             "recompiling jax epoch loop for %s (n_pages=%d, sampler=%s): "
-            "batch/epoch shape changed to B=%d, E=%d, fast_cap=%d",
-            engine_name, n, sampler, B, n_epochs, fast_cap)
+            "batch/epoch shape or selection changed to B=%d, E=%d, "
+            "fast_cap=%d, select=%s",
+            engine_name, n, sampler, B, n_epochs, fast_cap, select_mode)
     if pmapped:
         # data-parallel over local XLA devices: each device runs the scan on
         # a B/ndev slice of the batch.  Per-row draws are keyed by global
@@ -874,7 +920,7 @@ def _get_compiled(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
         Bl = B // ndev
         edef, run = _build_run_fn(engine_name, Bl, n, n_epochs, fast_cap,
                                   sampler, scale, page_bytes,
-                                  record_placement)
+                                  record_placement, select_mode)
         prun = jax.pmap(run, in_axes=(0, 0, None, None, None, 0))
 
         def sharded(kv, keys, reads_t, writes_t, const, est0):
@@ -890,7 +936,8 @@ def _get_compiled(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
         _COMPILED[key] = (edef, sharded)
         return edef, sharded
     edef, run = _build_run_fn(engine_name, B, n, n_epochs, fast_cap, sampler,
-                              scale, page_bytes, record_placement)
+                              scale, page_bytes, record_placement,
+                              select_mode)
     jitted = jax.jit(run)
     _COMPILED[key] = (edef, jitted)
     return edef, jitted
@@ -906,15 +953,20 @@ def run_epochs(workload, engine_name: str,
                const: Mapping[str, float], fast_cap: int, page_bytes: int,
                seeds: Sequence[int], sampler: str, crn: bool = False,
                batch_offset: int = 0, record_placement: bool = False,
-               python_loop: bool = False) -> Dict[str, np.ndarray]:
+               python_loop: bool = False,
+               exact_select: bool = True) -> Dict[str, np.ndarray]:
     """Run the compiled epoch loop; returns per-epoch result arrays.
 
     ``sim_configs`` must already be scale-adjusted (``scale_config``).
     ``python_loop=True`` runs the identical step function eagerly epoch by
     epoch instead of under ``lax.scan`` — the reference the scan is tested
-    against.  Output dict: ``wall_ms``/``cum_migrations``/``hit_rate``/
-    ``sampling_ms``/``stall_ms`` as ``(n_epochs, B)`` float arrays, plus
-    ``in_fast`` ``(n_epochs, B, n)`` when ``record_placement``.
+    against.  ``exact_select=True`` (default) plans migrations with the
+    exact top-k selection kernel (Pallas or its pure-jnp ref, resolved by
+    :func:`repro.kernels.ops.select_path`); ``False`` restores the
+    log-quantized ablation path.  Output dict: ``wall_ms``/
+    ``cum_migrations``/``hit_rate``/``sampling_ms``/``stall_ms`` as
+    ``(n_epochs, B)`` float arrays, plus ``in_fast`` ``(n_epochs, B, n)``
+    when ``record_placement``.
     """
     if not have_jax():  # pragma: no cover - env without jax
         raise RuntimeError("backend='jax' requires jax; install it or use "
@@ -933,10 +985,16 @@ def run_epochs(workload, engine_name: str,
     est0 = np.full(B, workload.epoch_ms, dtype=np.float32)
     const = {k: np.float32(v) for k, v in const.items()}
     scale = workload.scale
+    if exact_select:
+        from ..kernels import ops as kernel_ops
+        select_mode = kernel_ops.select_path()
+    else:
+        select_mode = "quantized"
 
     if python_loop:
         edef, _ = _build_run_fn(engine_name, B, n, E, fast_cap, sampler,
-                                scale, page_bytes, record_placement)
+                                scale, page_bytes, record_placement,
+                                select_mode)
         kv = edef.knobs(sim_configs)
         step = _build_step(edef, const, page_bytes, scale, record_placement)
         carry = (jnp.zeros((B, n), dtype=bool), jnp.zeros(n, dtype=bool),
@@ -952,7 +1010,8 @@ def run_epochs(workload, engine_name: str,
                         for i in range(len(outs[0])))
     else:
         edef, run = _get_compiled(engine_name, B, n, E, fast_cap, sampler,
-                                  scale, page_bytes, record_placement)
+                                  scale, page_bytes, record_placement,
+                                  select_mode)
         kv = edef.knobs(sim_configs)
         stacked = run(kv, keys, reads_t, writes_t, const, est0)
 

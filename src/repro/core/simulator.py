@@ -38,12 +38,18 @@ wrapper kept for existing callers.
   module's access-cost model) jit-compiles into one ``lax.scan`` per
   (engine, workload shape); see :mod:`repro.core.engine_jax`.  Draws are
   counter-based — equal in distribution to the reference but not
-  stream-compatible, so cross-backend parity is statistical.  ``crn=True``
-  additionally shares the monitoring noise bitwise across the batch
-  (common random numbers) for paired candidate comparisons during tuning;
-  leave it off when estimating absolute performance from independent
-  replicas.  Engines/samplers outside the builtin set fall back to the
-  numpy epoch loop with the vmapped jax cost model.
+  stream-compatible, so cross-backend parity is statistical for the
+  sampled engines; migration-plan selection itself is **exact** (the
+  top-k selection kernel of :mod:`repro.kernels.select_topk` returns
+  bit-identical index sets to the reference's stable sorts;
+  ``exact_select=False`` restores the historical log-quantized
+  approximation for ablations).  ``crn=True`` additionally shares the
+  monitoring noise bitwise across the batch (common random numbers) for
+  paired candidate comparisons during tuning; leave it off when
+  estimating absolute performance from independent replicas.
+  Engines/samplers outside the builtin set (and traces beyond the
+  compiled path's page ceiling) fall back to the numpy epoch loop with
+  the vmapped jax cost model — a one-line warning records the downgrade.
 
 Scaling: ``workload.scale`` shrinks the page count and access volume while
 *time semantics stay real*: effective bandwidth and memory-level parallelism
@@ -303,7 +309,8 @@ def _run_batch_jax(workload: Workload, engine_name: str,
                    fast_slow_ratio: float, seeds, sampler: str,
                    record_heatmap: bool, heat_bins: int,
                    fast_capacity_pages: Optional[int], crn: bool,
-                   batch_offset: int) -> List[SimResult]:
+                   batch_offset: int,
+                   exact_select: bool = True) -> List[SimResult]:
     """The compiled fast path: one ``lax.scan`` over epochs per batch (see
     :mod:`repro.core.engine_jax` for the backend contract)."""
     B = len(configs)
@@ -315,7 +322,7 @@ def _run_batch_jax(workload: Workload, engine_name: str,
     out = engine_jax.run_epochs(
         workload, engine_name, sim_cfgs, const, fast_cap, PAGE_BYTES,
         seeds, sampler, crn=crn, batch_offset=batch_offset,
-        record_placement=record_heatmap)
+        record_placement=record_heatmap, exact_select=exact_select)
     wall = np.asarray(out["wall_ms"], dtype=np.float64)
     cum_mig = np.asarray(out["cum_migrations"], dtype=np.float64)
     hit_rate = np.asarray(out["hit_rate"], dtype=np.float64)
@@ -348,21 +355,54 @@ def _run_batch_jax(workload: Workload, engine_name: str,
         placement=place[b] if record_heatmap else None) for b in range(B)]
 
 
+#: jax-fallback reasons already warned about (one line per distinct cause)
+_JAX_FALLBACK_WARNED: set = set()
+
+
+def _warn_jax_fallback(engine_name: str, sampler: str, n_pages: int) -> None:
+    """One-line warning when ``backend="jax"`` silently cannot compile the
+    requested combination and the numpy epoch loop runs instead (custom
+    engines are the ROADMAP follow-up; the vmapped jax cost model still
+    applies)."""
+    if engine_name not in engine_jax.JAX_ENGINES:
+        reason = (f"engine {engine_name!r} is not one of the compiled "
+                  f"builtins {engine_jax.JAX_ENGINES}")
+    elif sampler not in engine_jax.JAX_SAMPLERS:
+        reason = (f"sampler {sampler!r} is not one of the fused builtins "
+                  f"{engine_jax.JAX_SAMPLERS}")
+    elif n_pages > engine_jax.MAX_PAGES:
+        reason = (f"trace has {n_pages} pages, above the compiled path's "
+                  f"{engine_jax.MAX_PAGES}-page ceiling")
+    else:
+        reason = "jax is not installed"
+    key = (engine_name, sampler, reason)
+    if key in _JAX_FALLBACK_WARNED:
+        return
+    _JAX_FALLBACK_WARNED.add(key)
+    import logging
+    logging.getLogger(__name__).warning(
+        "backend='jax': %s; falling back to the numpy epoch loop "
+        "(vmapped jax cost model only)", reason)
+
+
 def _run_batch_local(workload: Workload, engine_name: str,
                      configs: Sequence[Mapping[str, Any]],
                      machine: Machine, fast_slow_ratio: float,
                      seeds, sampler: str, record_heatmap: bool,
                      heat_bins: int, fast_capacity_pages: Optional[int],
                      backend: str, crn: bool = False,
-                     batch_offset: int = 0) -> List[SimResult]:
-    if backend == "jax" and engine_jax.supports(engine_name, sampler,
-                                                workload.n_pages):
-        # the compiled fast path: engines + samplers + cost model fused into
-        # one jitted lax.scan over epochs
-        return _run_batch_jax(workload, engine_name, configs, machine,
-                              fast_slow_ratio, seeds, sampler, record_heatmap,
-                              heat_bins, fast_capacity_pages, crn,
-                              batch_offset)
+                     batch_offset: int = 0,
+                     exact_select: bool = True) -> List[SimResult]:
+    if backend == "jax":
+        if engine_jax.supports(engine_name, sampler, workload.n_pages):
+            # the compiled fast path: engines + samplers + cost model fused
+            # into one jitted lax.scan over epochs
+            return _run_batch_jax(workload, engine_name, configs, machine,
+                                  fast_slow_ratio, seeds, sampler,
+                                  record_heatmap, heat_bins,
+                                  fast_capacity_pages, crn, batch_offset,
+                                  exact_select)
+        _warn_jax_fallback(engine_name, sampler, workload.n_pages)
     if crn:
         raise ValueError(
             "crn=True (common random numbers) requires the compiled jax "
@@ -510,7 +550,7 @@ def _get_pool(workers: int):
 def _shard_worker(args):
     (wl_spec, components, engine_name, configs, machine, fast_slow_ratio,
      seeds, sampler, record_heatmap, heat_bins, fast_capacity_pages,
-     backend, crn, batch_offset) = args
+     backend, crn, batch_offset, exact_select) = args
     # spawn-context workers start from a fresh interpreter that only imported
     # this module, so components registered (or overridden) by user code are
     # unknown there; the parent's resolved objects shipped in the payload are
@@ -527,7 +567,8 @@ def _shard_worker(args):
     return _run_batch_local(wl, engine_name, configs, machine,
                             fast_slow_ratio, seeds, sampler, record_heatmap,
                             heat_bins, fast_capacity_pages, backend,
-                            crn=crn, batch_offset=batch_offset)
+                            crn=crn, batch_offset=batch_offset,
+                            exact_select=exact_select)
 
 
 def _resolve_workers(workers, batch: int) -> int:
@@ -546,7 +587,8 @@ def run_simulation_cells(cells,
                          fast_capacity_pages: Optional[int] = None,
                          backend: str = "numpy",
                          crn: bool = False,
-                         workers: int = 1) -> List[List[SimResult]]:
+                         workers: int = 1,
+                         exact_select: bool = True) -> List[List[SimResult]]:
     """Evaluate many (workload, engine, config-batch) *cells* through one
     shared work queue.
 
@@ -606,7 +648,7 @@ def run_simulation_cells(cells,
         return [_run_batch_local(wl, eng, cfgs, machine, fast_slow_ratio,
                                  cell_seeds[i], sampler, record_heatmap,
                                  heat_bins, fast_capacity_pages, backend,
-                                 crn=crn)
+                                 crn=crn, exact_select=exact_select)
                 for i, (wl, eng, cfgs) in enumerate(cells)]
 
     from .registry import ENGINES as _ENGINES, SAMPLERS as _SAMPLERS, \
@@ -629,7 +671,7 @@ def run_simulation_cells(cells,
                 wl_spec, components, eng, cfgs[lo:hi], machine,
                 fast_slow_ratio, cell_seeds[ci][lo:hi], sampler,
                 record_heatmap, heat_bins, fast_capacity_pages, backend,
-                crn, lo))
+                crn, lo, exact_select))
             futures.append((ci, fut))
     out: List[List[SimResult]] = [[] for _ in range(n_cells)]
     for ci, fut in futures:  # shards were submitted in config order per cell
@@ -648,7 +690,8 @@ def run_simulation_batch(workload: Workload, engine_name: str,
                          fast_capacity_pages: Optional[int] = None,
                          backend: str = "numpy",
                          crn: bool = False,
-                         workers: int = 1) -> List[SimResult]:
+                         workers: int = 1,
+                         exact_select: bool = True) -> List[SimResult]:
     """Simulate ``workload`` under B candidate configs in one pass.
 
     The workload trace is generated once and shared; engine state carries a
@@ -661,9 +704,12 @@ def run_simulation_batch(workload: Workload, engine_name: str,
     ``backend="jax"`` compiles the whole epoch loop (engines + samplers +
     cost model) into one jitted ``lax.scan`` with counter-based monitoring
     draws — equal in distribution, not stream-compatible; see
-    :mod:`repro.core.engine_jax`.  ``crn=True`` (jax only) shares the
-    monitoring noise bitwise across all B configs (common random numbers)
-    so within-batch comparisons see identical noise.
+    :mod:`repro.core.engine_jax`.  Its migration-plan selection is exact
+    by default (bit-identical index sets to the reference's stable sorts;
+    ``exact_select=False`` restores the log-quantized ablation path).
+    ``crn=True`` (jax only) shares the monitoring noise bitwise across
+    all B configs (common random numbers) so within-batch comparisons see
+    identical noise.
 
     ``sampler="sparse"`` (default) draws the exact Poisson sampling
     distribution at cost ∝ events; ``"elementwise"`` reproduces the
@@ -683,7 +729,7 @@ def run_simulation_batch(workload: Workload, engine_name: str,
     return run_simulation_cells(
         [(workload, engine_name, configs)], machine, fast_slow_ratio,
         [seeds], sampler, record_heatmap, heat_bins, fast_capacity_pages,
-        backend, crn, workers)[0]
+        backend, crn, workers, exact_select)[0]
 
 
 def run_simulation(workload: Workload, engine_name: str,

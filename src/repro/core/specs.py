@@ -140,6 +140,14 @@ class SimOptions:
     the batch; the numpy reference engines consume sequential RNG streams
     that cannot).  Use it for *tuning/comparison* runs; leave it off when
     estimating absolute performance from independent replicas.
+
+    ``exact_select=True`` (default) plans migrations on the jax backend
+    with the exact top-k selection kernel
+    (:mod:`repro.kernels.select_topk`): selected page sets are
+    bit-identical to the numpy reference's stable sorts.  ``False``
+    restores the historical 8-bit log-quantized selection (exact counts,
+    near-exact order) for ablations.  The numpy backend is always exact;
+    the flag is a no-op there.
     """
 
     seed: int = 0
@@ -147,6 +155,7 @@ class SimOptions:
     workers: Union[int, str] = 1
     backend: str = "numpy"
     crn: bool = False
+    exact_select: bool = True
     record_heatmap: bool = False
     heat_bins: int = 128
 

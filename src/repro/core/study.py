@@ -138,7 +138,8 @@ class Study:
             sampler=opts.sampler, record_heatmap=opts.record_heatmap,
             heat_bins=opts.heat_bins,
             fast_capacity_pages=self.spec.fast_capacity_pages,
-            backend=opts.backend, crn=opts.crn, workers=opts.workers)
+            backend=opts.backend, crn=opts.crn, workers=opts.workers,
+            exact_select=opts.exact_select)
         return results[0] if configs is None else results
 
     # -- tune --------------------------------------------------------------
@@ -235,7 +236,8 @@ class Study:
             seeds=opts.seed, sampler=opts.sampler,
             record_heatmap=opts.record_heatmap, heat_bins=opts.heat_bins,
             fast_capacity_pages=self.spec.fast_capacity_pages,
-            backend=opts.backend, crn=opts.crn, workers=opts.workers)
+            backend=opts.backend, crn=opts.crn, workers=opts.workers,
+            exact_select=opts.exact_select)
         out = SweepResult()
         for key, res in zip(cell_keys, results):
             out.cells[key] = res

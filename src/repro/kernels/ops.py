@@ -58,6 +58,36 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
                                  logit_softcap=logit_softcap)
 
 
+def select_path() -> str:
+    """The dispatch target :func:`select_topk` resolves to right now
+    (``"pallas"`` or ``"ref"``).  The compiled epoch loop folds this into
+    its jit-cache key so flipping :data:`FORCE` retraces instead of
+    silently reusing a function compiled for the other path."""
+    return "pallas" if _use_pallas() else "ref"
+
+
+def select_topk(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote,
+                mode: Optional[str] = None):
+    """Exact top-k promote/demote selection masks (stable index tie-break,
+    bit-exact vs numpy's stable sorts); see ``kernels/select_topk.py``.
+
+    ``mode=None`` resolves via :func:`select_path` (the ``FORCE``/TPU
+    dispatch); ``"pallas"``/``"ref"`` pin one implementation — the single
+    place the interpret-mode rule lives, so callers (the compiled epoch
+    loop in particular) never re-derive it."""
+    if mode is None:
+        mode = select_path()
+    if mode == "pallas":
+        from .select_topk import select_topk as sk
+        return sk(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote,
+                  interpret=not _on_tpu())
+    if mode == "ref":
+        return R.select_topk_ref(p_mask, p_heat, d_mask, d_heat,
+                                 n_promote, n_demote)
+    raise ValueError(f"unknown selection mode {mode!r}; "
+                     "expected 'pallas', 'ref' or None")
+
+
 def page_migrate(dst_pool, src_pool, dst_ids, src_ids):
     if _use_pallas():
         from .page_migrate import page_migrate as pm

@@ -15,6 +15,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _softcap(x, cap):
@@ -133,6 +134,71 @@ def page_migrate_ref(dst_pool, src_pool, dst_ids, src_ids):
     current = dst_pool[dst]
     rows = jnp.where(valid[:, None], rows, current)
     return dst_pool.at[dst].set(rows)
+
+
+# ---------------------------------------------------------------------------
+# exact top-k page selection (the migration planner's sort)
+# ---------------------------------------------------------------------------
+
+def _order_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """float32 -> uint32 preserving total order (NaN-free inputs)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return jnp.where((bits >> 31) == 0, bits | np.uint32(1 << 31), ~bits)
+
+
+def select_topk_ref(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote):
+    """Exact top-``n_promote`` (by ``p_heat`` desc) / top-``n_demote`` (by
+    ``d_heat`` asc) selection masks with page-index tie-break — bit-exact
+    against numpy's stable argsorts, without a dense sort.
+
+    The pure-jnp oracle of :mod:`repro.kernels.select_topk` and the CPU
+    fast path of the compiled epoch loop: a dual 32-step bitwise search
+    finds each side's k-th best order-preserving float bit pattern, strict
+    winners are taken wholesale, and the boundary tier (priority exactly
+    equal to the cutoff) is filled in page-index order by a second bitwise
+    search over descending-index weights.  All passes are f32
+    compare-count GEMVs (XLA CPU's predicate reductions are scalar, its
+    GEMV is vectorized); counts stay below 2**24 so the f32 arithmetic is
+    exact.  Priorities must be NaN-free (engine priorities are nonnegative
+    counts/rates).
+    """
+    n = p_mask.shape[-1]
+    ones = jnp.ones(n, jnp.float32)
+    kp = jnp.floor(n_promote.astype(jnp.float32))[:, None]
+    kd = jnp.floor(n_demote.astype(jnp.float32))[:, None]
+    vp = jnp.where(p_mask, _order_bits(p_heat), np.uint32(0))
+    vd = jnp.where(d_mask, ~_order_bits(d_heat), np.uint32(0))
+
+    def count_ge(v, t):
+        return ((v >= t).astype(jnp.float32) @ ones)[:, None]
+
+    tp = jnp.zeros((kp.shape[0], 1), dtype=jnp.uint32)
+    td = jnp.zeros((kd.shape[0], 1), dtype=jnp.uint32)
+    for i in range(31, -1, -1):
+        bit = np.uint32(1 << i)
+        tp = jnp.where(count_ge(vp, tp | bit) >= kp, tp | bit, tp)
+        td = jnp.where(count_ge(vd, td | bit) >= kd, td | bit, td)
+    strict_p = vp > tp
+    strict_d = vd > td
+    bound_p = (vp == tp) & (vp > 0)
+    bound_d = (vd == td) & (vd > 0)
+    take_p = kp - (strict_p.astype(jnp.float32) @ ones)[:, None]
+    take_d = kd - (strict_d.astype(jnp.float32) @ ones)[:, None]
+    # boundary tier in index order: search over descending-index weights
+    # (distinct per row, so the take-th largest threshold takes exactly
+    # `take` pages)
+    iv = np.uint32(n) - jnp.arange(n, dtype=jnp.uint32)[None, :]
+    wp = jnp.where(bound_p, iv, np.uint32(0))
+    wd = jnp.where(bound_d, iv, np.uint32(0))
+    sp = jnp.zeros_like(tp)
+    sd = jnp.zeros_like(td)
+    for i in range(16, -1, -1):
+        bit = np.uint32(1 << i)
+        sp = jnp.where(count_ge(wp, sp | bit) >= take_p, sp | bit, sp)
+        sd = jnp.where(count_ge(wd, sd | bit) >= take_d, sd | bit, sd)
+    pm = strict_p | (bound_p & (wp >= sp) & (take_p > 0))
+    dm = strict_d | (bound_d & (wd >= sd) & (take_d > 0))
+    return pm & (kp > 0), dm & (kd > 0)
 
 
 # ---------------------------------------------------------------------------

@@ -4,3 +4,14 @@ import sys
 # tests must see ONE device (the dry-run sets 512 itself, in its own process)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# CI conformance matrix: REPRO_KERNELS_FORCE=pallas|ref pins the kernels
+# dispatch (repro.kernels.ops.FORCE) for the whole session, so both paths
+# run the full suite on CPU (pallas in interpret mode)
+_force = os.environ.get("REPRO_KERNELS_FORCE")
+if _force:
+    if _force not in ("pallas", "ref"):
+        raise ValueError(
+            f"REPRO_KERNELS_FORCE must be 'pallas' or 'ref', got {_force!r}")
+    from repro.kernels import ops as _kernel_ops
+    _kernel_ops.FORCE = _force

@@ -1,0 +1,206 @@
+"""Cross-backend conformance suite for exact top-k page selection.
+
+Pins down the contract of ``repro.kernels.select_topk`` (Pallas, interpret
+mode off-TPU) and ``repro.kernels.ref.select_topk_ref`` (pure jnp): on any
+candidate mask / priority / k combination, the selected **index sets** must
+be bit-identical to the numpy stable-sort reference the tiering engines
+define (promotions: hottest first; demotions: coldest first; priority ties
+break by page index, ascending).
+
+The property corpus (hypothesis when installed, the deterministic stub
+otherwise) covers random masks, heavy priority ties, k in {0, 1, n} and
+empty/full candidate sets — NaN-free, as the engines' nonnegative
+count/rate priorities guarantee.  A second block checks the
+``repro.kernels.ops`` dispatch (the ``FORCE`` switch, honoured by the
+compiled epoch loop's jit-cache key) and that all five batch engines
+produce bit-identical simulations whichever implementation serves
+selection.
+
+Run under ``REPRO_KERNELS_FORCE=pallas`` / ``=ref`` (the CI conformance
+matrix) to pin the global dispatch; the parametrized tests below exercise
+both paths regardless.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.ref import select_topk_ref  # noqa: E402
+from repro.kernels.select_topk import select_topk as select_topk_pallas  # noqa: E402
+
+# one fixed shape for the whole property corpus: jit traces once per
+# dispatch path instead of once per example
+B, N = 3, 256
+
+
+def _pallas(*args):
+    return select_topk_pallas(*args, interpret=True)
+
+
+IMPLS = {"pallas": _pallas, "ref": select_topk_ref}
+
+
+def np_select(mask, heat, k, largest):
+    """The numpy stable-sort reference the engines implement: indices of
+    the top-k candidates (ties by index, ascending), sorted."""
+    idx = np.flatnonzero(mask)
+    k = min(int(k), idx.size)
+    key = -heat[idx] if largest else heat[idx]
+    order = np.argsort(key, kind="stable")
+    return np.sort(idx[order[:k]])
+
+
+def assert_conforms(p_mask, p_heat, d_mask, d_heat, kp, kd,
+                    impls=tuple(IMPLS)):
+    args = (jnp.asarray(p_mask), jnp.asarray(p_heat), jnp.asarray(d_mask),
+            jnp.asarray(d_heat), jnp.asarray(kp), jnp.asarray(kd))
+    for name in impls:
+        pm, dm = IMPLS[name](*args)
+        pm, dm = np.asarray(pm), np.asarray(dm)
+        for b in range(p_mask.shape[0]):
+            np.testing.assert_array_equal(
+                np.flatnonzero(pm[b]), np_select(p_mask[b], p_heat[b],
+                                                 kp[b], True),
+                err_msg=f"{name}: promote row {b} (k={kp[b]})")
+            np.testing.assert_array_equal(
+                np.flatnonzero(dm[b]), np_select(d_mask[b], d_heat[b],
+                                                 kd[b], False),
+                err_msg=f"{name}: demote row {b} (k={kd[b]})")
+
+
+def _corpus_case(seed: int, levels: int, density: float):
+    """One property example: (B, N) masks/heats and per-row k values that
+    sweep the edges {0, 1, N} plus a random interior point."""
+    rng = np.random.default_rng(seed)
+    if levels:  # small integer grid => heavy priority ties
+        p_heat = rng.integers(0, levels, size=(B, N)).astype(np.float32)
+        d_heat = rng.integers(0, levels, size=(B, N)).astype(np.float32)
+    else:
+        p_heat = rng.uniform(0.0, 1e6, size=(B, N)).astype(np.float32)
+        d_heat = rng.uniform(0.0, 1e6, size=(B, N)).astype(np.float32)
+    p_mask = rng.uniform(size=(B, N)) < density
+    d_mask = rng.uniform(size=(B, N)) < density
+    edges = [0, 1, N, int(rng.integers(0, N + 1))]
+    kp = np.array([edges[b % len(edges)] for b in range(B)], np.float32)
+    kd = np.array([edges[(b + 1) % len(edges)] for b in range(B)],
+                  np.float32)
+    return p_mask, p_heat, d_mask, d_heat, kp, kd
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       levels=st.sampled_from([0, 2, 3, 17, 255]),
+       density=st.floats(0.05, 0.95))
+def test_property_conformance(seed, levels, density):
+    assert_conforms(*_corpus_case(seed, levels, density))
+
+
+@pytest.mark.parametrize("impl", list(IMPLS))
+def test_all_priorities_tied_select_lowest_indices(impl):
+    """A fully tied tier must fill in page-index order (numpy stability)."""
+    p_mask = np.ones((B, N), bool)
+    heat = np.full((B, N), 7.0, np.float32)
+    k = np.array([0, 1, 13], np.float32)
+    assert_conforms(p_mask, heat, p_mask, heat, k, k, impls=(impl,))
+    pm, _ = IMPLS[impl](jnp.asarray(p_mask), jnp.asarray(heat),
+                        jnp.asarray(p_mask), jnp.asarray(heat),
+                        jnp.asarray(k), jnp.asarray(k))
+    assert np.flatnonzero(np.asarray(pm)[2]).tolist() == list(range(13))
+
+
+@pytest.mark.parametrize("impl", list(IMPLS))
+def test_k_exceeding_candidates_takes_all(impl):
+    rng = np.random.default_rng(5)
+    p_mask = rng.uniform(size=(B, N)) < 0.1
+    heat = rng.integers(0, 3, size=(B, N)).astype(np.float32)
+    k = np.full(B, N, np.float32)  # far above the candidate count
+    assert_conforms(p_mask, heat, p_mask, heat, k, k, impls=(impl,))
+
+
+@pytest.mark.parametrize("impl", list(IMPLS))
+def test_empty_candidate_sets(impl):
+    z = np.zeros((B, N), bool)
+    heat = np.ones((B, N), np.float32)
+    k = np.full(B, 10.0, np.float32)
+    pm, dm = IMPLS[impl](jnp.asarray(z), jnp.asarray(heat), jnp.asarray(z),
+                         jnp.asarray(heat), jnp.asarray(k), jnp.asarray(k))
+    assert not np.asarray(pm).any() and not np.asarray(dm).any()
+
+
+def test_adversarial_near_tie_floats():
+    """Adjacent float32 values (one ulp apart) must NOT be treated as ties
+    — exactness means full 32-bit priority resolution."""
+    base = np.float32(1000.0)
+    up = np.nextafter(base, np.float32(np.inf), dtype=np.float32)
+    heat = np.tile(np.array([base, up] * (N // 2), np.float32), (B, 1))
+    mask = np.ones((B, N), bool)
+    k = np.full(B, N // 2, np.float32)
+    assert_conforms(mask, heat, mask, heat, k, k)
+    pm, dm = select_topk_ref(jnp.asarray(mask), jnp.asarray(heat),
+                             jnp.asarray(mask), jnp.asarray(heat),
+                             jnp.asarray(k), jnp.asarray(k))
+    # promote takes every `up`, demote every `base` — no index fallback
+    assert np.flatnonzero(np.asarray(pm)[0]).tolist() == \
+        list(range(1, N, 2))
+    assert np.flatnonzero(np.asarray(dm)[0]).tolist() == \
+        list(range(0, N, 2))
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch (the FORCE switch the compiled epoch loop keys on)
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def restore_force():
+    old = ops.FORCE
+    yield
+    ops.FORCE = old
+
+
+def test_ops_dispatch_honours_force(restore_force):
+    case = _corpus_case(123, 4, 0.4)
+    args = tuple(jnp.asarray(a) for a in case)
+    outs = {}
+    for force in ("pallas", "ref"):
+        ops.FORCE = force
+        assert ops.select_path() == force
+        outs[force] = tuple(np.asarray(x) for x in ops.select_topk(*args))
+    for a, b in zip(outs["pallas"], outs["ref"]):
+        np.testing.assert_array_equal(a, b)
+    assert_conforms(*case)  # and both agree with the numpy reference
+
+
+@pytest.mark.parametrize("engine", ["hemem", "hmsdk", "memtis", "static",
+                                    "oracle"])
+@pytest.mark.parametrize("sampler", ["sparse", "elementwise"])
+def test_engine_simulation_identical_across_dispatch(restore_force, engine,
+                                                     sampler):
+    """The acceptance bar: for every engine and sampler, the compiled epoch
+    loop must produce bit-identical simulations whether selection runs
+    through the Pallas kernel (interpret mode) or the pure-jnp ref."""
+    from repro.core.knobs import get_space
+    from repro.core.simulator import run_simulation_batch
+    from repro.core.workloads import make_workload
+    wl = make_workload("gups", "8GiB-hot", threads=8, scale=0.02, seed=3)
+    if engine in ("hemem", "hmsdk", "memtis"):
+        cfgs = [get_space(engine).default_config(),
+                get_space(engine).sample(np.random.default_rng(1))]
+    else:
+        cfgs = [{}, {}]
+    results = {}
+    for force in ("ref", "pallas"):
+        ops.FORCE = force
+        results[force] = run_simulation_batch(
+            wl, engine, cfgs, "pmem-large", seeds=7, sampler=sampler,
+            backend="jax")
+    for a, b in zip(results["ref"], results["pallas"]):
+        assert np.array_equal(a.cum_migrations, b.cum_migrations)
+        assert np.array_equal(a.epoch_wall_ms, b.epoch_wall_ms)
+        assert np.array_equal(a.fast_hit_rate, b.fast_hit_rate)
