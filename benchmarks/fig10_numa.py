@@ -4,14 +4,28 @@ config transfer.
 Paper claims: gains are mostly modest on NUMA (tiers are close in
 latency/bandwidth, migrations nearly free) and pmem-large best configs
 mostly perform well when transferred to NUMA.
+
+Ported to the typed Study API (completing the PR 2 migration): one
+``ExperimentSpec`` per (workload, machine), tuned with batched SMAC rounds
+(``batch_size=4``, process-pool sharded) instead of the deprecated
+``Scenario``/``tune_scenario`` shims; the transfer evaluation reuses the
+NUMA study's cached workload trace.  Result payloads embed the replayable
+spec.
 """
 
 from __future__ import annotations
 
-from repro.core.simulator import Scenario
-from repro.core.bo.tuner import tune_scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 
 from .common import SUITE, budget, claim, print_claims, save
+
+BATCH_SIZE = 4
+
+
+def _study(wname: str, inp: str, machine: str) -> Study:
+    return Study(ExperimentSpec(
+        engine="hemem", workload=WorkloadSpec(wname, inp), machine=machine,
+        options=SimOptions(sampler="sparse", workers="auto")))
 
 
 def run(quick: bool = False) -> dict:
@@ -22,18 +36,19 @@ def run(quick: bool = False) -> dict:
     suite = SUITE if not quick else [("silo", "ycsb-c"), ("xsbench", ""),
                                      ("gups", "8GiB-hot")]
     for wname, inp in suite:
-        sc_numa = Scenario(wname, inp, machine="numa")
-        res_numa = tune_scenario("hemem", sc_numa, budget=b, seed=19)
-        numa_imps[sc_numa.key] = res_numa.improvement
+        study_numa = _study(wname, inp, "numa")
+        res_numa = study_numa.tune(budget=b, batch_size=BATCH_SIZE, seed=19)
+        numa_imps[study_numa.key] = res_numa.improvement
 
         # transfer the pmem-large best config onto the NUMA machine
-        sc_pmem = Scenario(wname, inp, machine="pmem-large")
-        res_pmem = tune_scenario("hemem", sc_pmem, budget=b, seed=19)
-        f_numa = sc_numa.objective("hemem")
-        transfer_s = f_numa(res_pmem.best.config)
+        res_pmem = _study(wname, inp, "pmem-large").tune(
+            budget=b, batch_size=BATCH_SIZE, seed=19)
+        transfer_s = study_numa.run(
+            configs=[res_pmem.best.config])[0].total_s
         rel = transfer_s / res_numa.best_value
         transfer_ok.append(rel <= 1.15)
-        out["workloads"][sc_numa.key] = {
+        out["workloads"][study_numa.key] = {
+            "spec": study_numa.spec.to_dict(),
             "numa_improvement": res_numa.improvement,
             "pmem_config_on_numa_vs_numa_best": rel,
         }

@@ -3,14 +3,20 @@
 Paper claims: significant gains for some workloads (PR, Btree, XSBench via
 better monitoring / eliminated migrations), modest for others, and NO gain
 for GUPS (DAMON's region assumption fails — see fig12).
+
+Ported to the typed Study API (completing the PR 2 migration): batched
+SMAC rounds (``batch_size=4``, process-pool sharded) replace the
+deprecated ``Scenario``/``tune_scenario`` shims; result payloads embed the
+replayable spec.
 """
 
 from __future__ import annotations
 
-from repro.core.simulator import Scenario
-from repro.core.bo.tuner import tune_scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 
 from .common import SUITE, budget, claim, print_claims, save
+
+BATCH_SIZE = 4
 
 
 def run(quick: bool = False) -> dict:
@@ -21,14 +27,18 @@ def run(quick: bool = False) -> dict:
     suite = SUITE if not quick else [("gapbs-pr", "kron"), ("xsbench", ""),
                                      ("gups", "8GiB-hot")]
     for wname, inp in suite:
-        sc = Scenario(wname, inp, machine="numa")
-        res = tune_scenario("hmsdk", sc, budget=b, seed=23)
+        study = Study(ExperimentSpec(
+            engine="hmsdk", workload=WorkloadSpec(wname, inp),
+            machine="numa",
+            options=SimOptions(sampler="sparse", workers="auto")))
+        res = study.tune(budget=b, batch_size=BATCH_SIZE, seed=23)
         imps[wname] = res.improvement
-        out["workloads"][sc.key] = {
+        out["workloads"][study.key] = {
+            "spec": study.spec.to_dict(),
             "default_s": res.default_value, "best_s": res.best_value,
             "improvement": res.improvement, "best_config": res.best.config,
         }
-        print(f"  {sc.key:26s} {res.improvement:.2f}x", flush=True)
+        print(f"  {study.key:26s} {res.improvement:.2f}x", flush=True)
 
     others = {k: v for k, v in imps.items() if k != "gups"}
     import numpy as _np

@@ -3,17 +3,23 @@ HeMem-default.
 
 Paper claims: Memtis beats HeMem-default on some workloads but the tuned
 HeMem configuration outperforms Memtis on ALL workloads (~1.56x on average).
+
+Ported to the typed Study API (completing the PR 2 migration): HeMem is
+tuned with batched SMAC rounds and the Memtis baseline is one
+``Study.run()`` on the same workload spec — no ``Scenario``/
+``tune_scenario``/``evaluate`` shims.  Result payloads embed the
+replayable specs.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.simulator import Scenario, evaluate
-from repro.core.knobs import MEMTIS_SPACE
-from repro.core.bo.tuner import tune_scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 
 from .common import SUITE, budget, claim, print_claims, save
+
+BATCH_SIZE = 4
 
 
 def run(quick: bool = False) -> dict:
@@ -24,21 +30,25 @@ def run(quick: bool = False) -> dict:
     memtis_beats_default = 0
     suite = SUITE if not quick else SUITE[:4]
     for wname, inp in suite:
-        sc = Scenario(wname, inp)
-        res = tune_scenario("hemem", sc, budget=b, seed=29)
-        memtis_s = evaluate("memtis", MEMTIS_SPACE.default_config(),
-                            wname, inp, sc.machine, sc.threads, sc.scale,
-                            sc.fast_slow_ratio, sc.seed)
-        ratios[sc.key] = memtis_s / res.best_value
+        opts = SimOptions(sampler="sparse", workers="auto")
+        wspec = WorkloadSpec(wname, inp)
+        study = Study(ExperimentSpec(engine="hemem", workload=wspec,
+                                     options=opts))
+        res = study.tune(budget=b, batch_size=BATCH_SIZE, seed=29)
+        memtis = Study(ExperimentSpec(engine="memtis", workload=wspec,
+                                      options=opts))
+        memtis_s = memtis.run().total_s
+        ratios[study.key] = memtis_s / res.best_value
         if memtis_s < res.default_value:
             memtis_beats_default += 1
-        out["workloads"][sc.key] = {
+        out["workloads"][study.key] = {
+            "spec": study.spec.to_dict(),
             "hemem_default_s": res.default_value,
             "hemem_best_s": res.best_value,
             "memtis_s": memtis_s,
             "tuned_vs_memtis": memtis_s / res.best_value,
         }
-        print(f"  {sc.key:22s} default={res.default_value:7.1f} "
+        print(f"  {study.key:22s} default={res.default_value:7.1f} "
               f"tuned={res.best_value:7.1f} memtis={memtis_s:7.1f} "
               f"tuned-vs-memtis={memtis_s / res.best_value:.2f}x", flush=True)
 

@@ -27,6 +27,7 @@ MODULES = [
     "fig11_hmsdk",
     "fig12_damon_gups",
     "fig13_memtis",
+    "bo_overhead",
     "serving_tiered_kv",
     "roofline",
 ]

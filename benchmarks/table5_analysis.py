@@ -8,24 +8,24 @@ Paper claims validated here:
   * Silo's important knobs include the *hidden* cooling_pages.
   * GUPS best config increases sampling accuracy (lower sampling_period)
     or otherwise stabilizes hot classification, reducing shuffling.
+
+Ported to the typed Study API (completing the PR 2 migration): tuning runs
+as batched SMAC rounds and the default-vs-best mechanism evidence comes
+from ONE batched ``Study.run(configs=[default, best])`` pass over the
+shared workload trace — no ``Scenario``/``tune_scenario``/
+``run_simulation`` shims.  The knob-importance sweep rides the flat-forest
+``predict_batch`` fast path (one descent over all knob sweeps).
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.simulator import Scenario, run_simulation, PMEM_LARGE
-from repro.core.workloads import make_workload
-from repro.core.knobs import HEMEM_SPACE
-from repro.core.bo.tuner import tune_scenario
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
 from repro.core.bo.importance import knob_importance
+from repro.core.knobs import HEMEM_SPACE
 
 from .common import budget, claim, print_claims, save
 
-
-def _sim(wname, inp, cfg):
-    wl = make_workload(wname, inp, threads=12, scale=0.25, seed=0)
-    return run_simulation(wl, "hemem", cfg, PMEM_LARGE, seed=0)
+BATCH_SIZE = 4
 
 
 def run(quick: bool = False) -> dict:
@@ -36,15 +36,18 @@ def run(quick: bool = False) -> dict:
 
     for wname, inp in [("gapbs-pr", "kron"), ("xsbench", ""), ("btree", ""),
                        ("silo", "ycsb-c"), ("gups", "8GiB-hot")]:
-        sc = Scenario(wname, inp)
-        res = tune_scenario("hemem", sc, budget=b, seed=5)
+        study = Study(ExperimentSpec(
+            engine="hemem", workload=WorkloadSpec(wname, inp, threads=12),
+            options=SimOptions(sampler="sparse", workers="auto")))
+        res = study.tune(budget=b, batch_size=BATCH_SIZE, seed=5)
         best_cfg = res.best.config
-        r_def = _sim(wname, inp, default_cfg)
-        r_best = _sim(wname, inp, best_cfg)
+        # default and best mechanisms from one shared-trace batched pass
+        r_def, r_best = study.run(configs=[default_cfg, best_cfg])
         imp = knob_importance(HEMEM_SPACE, res.history)
         diff = {k: (default_cfg[k], best_cfg[k]) for k in best_cfg
                 if best_cfg[k] != default_cfg[k]}
-        out["workloads"][sc.key] = {
+        out["workloads"][study.key] = {
+            "spec": study.spec.to_dict(),
             "improvement": res.improvement,
             "migrations_default": r_def.total_migrations,
             "migrations_best": r_best.total_migrations,
@@ -53,9 +56,9 @@ def run(quick: bool = False) -> dict:
             "knob_diff": diff,
             "importance": imp,
         }
-        print(f"  {sc.key:22s} {res.improvement:.2f}x  migs {r_def.total_migrations}"
-              f" -> {r_best.total_migrations}  top-knobs: "
-              f"{list(imp)[:3]}", flush=True)
+        print(f"  {study.key:22s} {res.improvement:.2f}x  migs "
+              f"{r_def.total_migrations} -> {r_best.total_migrations}  "
+              f"top-knobs: {list(imp)[:3]}", flush=True)
 
         if wname in ("gapbs-pr", "xsbench"):
             claims.append(claim(

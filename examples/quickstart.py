@@ -25,6 +25,15 @@ historical log-quantized approximation for ablations, and
 The experiment is fully described by one JSON-round-trippable
 ``ExperimentSpec``; see ``examples/legacy_quickstart.py`` for the
 deprecated pre-PR-2 call pattern.
+
+The optimizer itself runs its compiled hot path by default (PR 5): the
+random-forest surrogate is grown level-synchronously into flat arrays and
+EI acquisition is one fused vectorized pass (jitted on TPU hosts) ending in
+the exact ``select_topk`` top-q kernel — ask/tell costs a few percent of
+evaluation wall clock (receipts: ``python -m benchmarks.bo_overhead`` ->
+``BENCH_bo.json``).  ``Study.tune(surrogate="reference")`` pins the
+recursive reference forest (bit-identical suggestions, for debugging) and
+``acquisition="legacy"`` replays the pre-PR-5 scoring pipeline.
 """
 import argparse
 import json

@@ -21,20 +21,29 @@ from .smac import Observation
 def knob_importance(space: KnobSpace, observations: List[Observation],
                     n_sweep: int = 32, seed: int = 0,
                     base: Optional[Mapping[str, float]] = None,
+                    surrogate: Optional[str] = None,
                     ) -> Dict[str, float]:
+    """``surrogate`` picks the forest builder (``"reference"|"fast"``;
+    None = the :data:`repro.core.bo.rf.FORCE` default).  All per-knob
+    sweeps are stacked into ONE ``(n_knobs * n_sweep, d)`` matrix and
+    scored by a single flat-forest descent pass (`predict_batch`), so the
+    Table-5 analysis rides the same fast inference path as the tuner."""
     X = np.stack([space.encode(o.config) for o in observations])
     y = np.array([o.value for o in observations])
-    model = RandomForest(seed=seed).fit(X, y)
+    model = RandomForest(seed=seed, mode=surrogate).fit(X, y)
 
     base_cfg = space.validate(dict(base)) if base else space.default_config()
     x0 = space.encode(base_cfg)
 
-    raw: Dict[str, float] = {}
-    for i, knob in enumerate(space):
-        sweep = np.tile(x0, (n_sweep, 1))
-        sweep[:, i] = np.linspace(0.0, 1.0, n_sweep)
-        mean, _ = model.predict(sweep)
-        raw[knob.name] = float(mean.max() - mean.min())
+    k = len(space)
+    sweeps = np.tile(x0, (k * n_sweep, 1))
+    grid = np.linspace(0.0, 1.0, n_sweep)
+    for i in range(k):
+        sweeps[i * n_sweep:(i + 1) * n_sweep, i] = grid
+    mean, _ = model.predict_batch(sweeps)
+    mean = mean.reshape(k, n_sweep)
+    raw = {knob.name: float(mean[i].max() - mean[i].min())
+           for i, knob in enumerate(space)}
     total = sum(raw.values()) or 1.0
     return {k: v / total for k, v in sorted(raw.items(),
                                             key=lambda kv: -kv[1])}

@@ -3,8 +3,31 @@
 SMAC's surrogate model [18, 22]: a forest of CART regression trees over the
 unit-encoded knob space.  The across-tree spread provides the predictive
 variance the EI acquisition needs.  No sklearn in this environment, so the
-trees are implemented directly; with tuning-session sizes (≤ a few hundred
-observations, ≤ ~15 features) exact split search is cheap.
+trees are implemented directly; with tuning-session sizes (<= a few hundred
+observations, <= ~15 features) exact split search is cheap.
+
+Two builders produce bit-identical forests (``tests/test_bo.py`` pins it):
+
+* ``mode="fast"`` (the default) — :func:`~repro.core.bo.forest_fast.
+  fit_forest_fast`, level-synchronous vectorized growth emitting flat
+  ``(T, max_nodes)`` arrays directly.
+* ``mode="reference"`` — the historical per-node recursive CART builder,
+  kept as the executable specification (and the CI matrix leg
+  ``REPRO_SURROGATE_FORCE=reference|fast`` runs the suite under both).
+
+Shared randomness protocol (changed in PR 5 — suggestion histories differ
+from earlier PRs; the delta is documented here and regression-tested):
+``fit`` draws the whole bootstrap matrix up front and a single feature-hash
+seed; per-node feature subsets come from the counter-based
+:func:`~repro.core.bo.forest_fast.feature_subsets` hash of
+``(seed, tree, heap-node)`` instead of a sequential ``rng.choice`` stream,
+so build order (DFS vs BFS) cannot change the forest.  Node means and the
+variance-floor termination are computed from sequential cumsums in both
+builders for bit-equality.
+
+Set :data:`FORCE` = ``"reference" | "fast"`` to pin a path globally
+(mirroring ``repro.kernels.ops.FORCE``); tests/conftest.py wires the
+``REPRO_SURROGATE_FORCE`` env var to it.
 """
 
 from __future__ import annotations
@@ -13,6 +36,22 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 import numpy as np
+
+from .forest_fast import (FlatForest, _MIN_NODE_VAR, feature_subsets,
+                          fit_forest_fast, predict_forest)
+
+#: pin the surrogate builder ("reference" | "fast"); None = DEFAULT_MODE
+FORCE: Optional[str] = None
+DEFAULT_MODE = "fast"
+
+
+def resolve_mode(mode: Optional[str] = None) -> str:
+    """The builder a ``RandomForest`` (or :data:`FORCE`) resolves to."""
+    mode = mode or FORCE or DEFAULT_MODE
+    if mode not in ("reference", "fast"):
+        raise ValueError(f"unknown surrogate mode {mode!r}; "
+                         "expected 'reference' or 'fast'")
+    return mode
 
 
 @dataclasses.dataclass
@@ -26,38 +65,47 @@ class _Node:
 
 
 class _Tree:
-    """CART regression tree with random feature subsetting at each split."""
+    """Reference CART regression tree: per-node recursion, DFS pre-order.
+
+    Consumes NO sequential randomness — the feature subset for the split
+    attempt at heap node ``h`` is ``feature_subsets(feat_seed, tree, h)``,
+    the same deterministic hash the level-synchronous fast builder uses.
+    """
 
     def __init__(self, max_depth: int, min_leaf: int, max_features: int,
-                 rng: np.random.Generator):
+                 tree_index: int, feat_seed: int):
         self.max_depth = max_depth
         self.min_leaf = min_leaf
         self.max_features = max_features
-        self.rng = rng
+        self.tree_index = tree_index
+        self.feat_seed = feat_seed
         self.nodes: List[_Node] = []
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "_Tree":
         self.nodes = []
-        if hasattr(self, "_arr"):
-            del self._arr  # predict_batch cache belongs to the old nodes
-        self._build(X, y, depth=0)
+        self._build(X, y, depth=0, heap=1)
         return self
 
-    def _build(self, X: np.ndarray, y: np.ndarray, depth: int) -> int:
+    def _build(self, X: np.ndarray, y: np.ndarray, depth: int,
+               heap: int) -> int:
         idx = len(self.nodes)
-        self.nodes.append(_Node(value=float(y.mean())))
-        if depth >= self.max_depth or len(y) < 2 * self.min_leaf \
-                or float(y.std()) < 1e-12:
+        n = len(y)
+        c1 = np.cumsum(y)
+        c2 = np.cumsum(y * y)
+        self.nodes.append(_Node(value=float(c1[-1] / n)))
+        sse = c2[-1] - c1[-1] ** 2 / n
+        if depth >= self.max_depth or n < 2 * self.min_leaf \
+                or not (sse >= n * _MIN_NODE_VAR):
             return idx
         d = X.shape[1]
-        feats = self.rng.choice(d, size=min(self.max_features, d),
-                                replace=False)
+        feats = feature_subsets(self.feat_seed, self.tree_index, heap,
+                                d, min(self.max_features, d))
         best = self._best_split(X, y, feats)
         if best is None:
             return idx
         f, thr, mask = best
-        left = self._build(X[mask], y[mask], depth + 1)
-        right = self._build(X[~mask], y[~mask], depth + 1)
+        left = self._build(X[mask], y[mask], depth + 1, 2 * heap)
+        right = self._build(X[~mask], y[~mask], depth + 1, 2 * heap + 1)
         node = self.nodes[idx]
         node.feature, node.threshold, node.left, node.right = f, thr, left, right
         return idx
@@ -93,9 +141,9 @@ class _Tree:
         return best
 
     def predict(self, X: np.ndarray) -> np.ndarray:
+        """Per-row walk — the oracle the flat descent is tested against."""
         out = np.empty(len(X))
         for i, x in enumerate(X):
-            j = 0
             node = self.nodes[0]
             while node.feature >= 0:
                 j = node.left if x[node.feature] <= node.threshold else node.right
@@ -103,46 +151,48 @@ class _Tree:
             out[i] = node.value
         return out
 
-    def _arrays(self):
-        if not hasattr(self, "_arr"):
-            self._arr = (
-                np.array([n.feature for n in self.nodes], dtype=np.int64),
-                np.array([n.threshold for n in self.nodes]),
-                np.array([n.left for n in self.nodes], dtype=np.int64),
-                np.array([n.right for n in self.nodes], dtype=np.int64),
-                np.array([n.value for n in self.nodes]),
-            )
-        return self._arr
 
-    def predict_batch(self, X: np.ndarray) -> np.ndarray:
-        """Vectorized descent: all rows walk the tree level-synchronously.
-        Same leaves (hence same values) as :meth:`predict`."""
-        feat, thr, left, right, value = self._arrays()
-        idx = np.zeros(len(X), dtype=np.int64)
-        rows = np.arange(len(X))
-        while True:
-            f = feat[idx]
-            live = f >= 0
-            if not live.any():
-                break
-            li, lf = idx[live], f[live]
-            go_left = X[rows[live], lf] <= thr[li]
-            idx[live] = np.where(go_left, left[li], right[li])
-        return value[idx]
+def _pack_reference_trees(trees: List[_Tree], max_depth: int) -> FlatForest:
+    """Flatten reference trees (nodes already in DFS pre-order) to the same
+    padded ``(T, M)`` arrays the fast builder emits."""
+    T = len(trees)
+    counts = np.array([len(t.nodes) for t in trees], dtype=np.int64)
+    M = int(counts.max())
+    F = np.full((T, M), -1, dtype=np.int64)
+    TH = np.zeros((T, M))
+    LC = np.full((T, M), -1, dtype=np.int64)
+    RC = np.full((T, M), -1, dtype=np.int64)
+    V = np.zeros((T, M))
+    for t, tree in enumerate(trees):
+        k = len(tree.nodes)
+        F[t, :k] = [nd.feature for nd in tree.nodes]
+        TH[t, :k] = [nd.threshold for nd in tree.nodes]
+        LC[t, :k] = [nd.left for nd in tree.nodes]
+        RC[t, :k] = [nd.right for nd in tree.nodes]
+        V[t, :k] = [nd.value for nd in tree.nodes]
+    return FlatForest(feature=F, threshold=TH, left=LC, right=RC, value=V,
+                      n_nodes=counts, max_depth=max_depth)
 
 
 class RandomForest:
-    """Bagged regression forest with mean/variance prediction."""
+    """Bagged regression forest with mean/variance prediction.
+
+    ``mode=None`` resolves via :func:`resolve_mode` at fit time; the
+    resulting :class:`~repro.core.bo.forest_fast.FlatForest` is stored on
+    ``self.forest`` and all predictions run the flat batched descent.
+    """
 
     def __init__(self, n_trees: int = 24, max_depth: int = 12,
                  min_leaf: int = 2, max_features: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, mode: Optional[str] = None):
         self.n_trees = n_trees
         self.max_depth = max_depth
         self.min_leaf = min_leaf
         self.max_features = max_features
         self.rng = np.random.default_rng(seed)
-        self.trees: List[_Tree] = []
+        self.mode = mode
+        self.trees: List[_Tree] = []   # populated in reference mode only
+        self.forest: Optional[FlatForest] = None
         self._y_mean = 0.0
         self._y_std = 1.0
 
@@ -152,28 +202,37 @@ class RandomForest:
         self._y_mean = float(y.mean())
         self._y_std = float(y.std()) or 1.0
         yn = (y - self._y_mean) / self._y_std
-        d = X.shape[1]
+        n, d = X.shape
         mf = self.max_features or max(1, int(np.ceil(d * 5.0 / 6.0)))
-        self.trees = []
-        n = len(X)
-        for _ in range(self.n_trees):
-            boot = self.rng.integers(0, n, size=n)
-            t = _Tree(self.max_depth, self.min_leaf, mf, self.rng)
-            t.fit(X[boot], yn[boot])
-            self.trees.append(t)
+        mf = min(mf, d)
+        # shared randomness protocol: bootstraps + feature-hash seed drawn
+        # up front, identically for both builders
+        boot = self.rng.integers(0, n, size=(self.n_trees, n))
+        feat_seed = int(self.rng.integers(2 ** 63))
+        mode = resolve_mode(self.mode)
+        if mode == "reference":
+            self.trees = []
+            for t in range(self.n_trees):
+                tree = _Tree(self.max_depth, self.min_leaf, mf, t, feat_seed)
+                tree.fit(X[boot[t]], yn[boot[t]])
+                self.trees.append(tree)
+            self.forest = _pack_reference_trees(self.trees, self.max_depth)
+        else:
+            self.trees = []
+            self.forest = fit_forest_fast(X, yn, boot, feat_seed,
+                                          self.max_depth, self.min_leaf, mf)
         return self
 
     def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (mean, std) per row, de-normalized."""
-        X = np.asarray(X, dtype=np.float64)
-        preds = np.stack([t.predict(X) for t in self.trees])  # (T, N)
-        return self._moments(preds)
+        return self.predict_batch(X)
 
     def predict_batch(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Same (mean, std) as :meth:`predict` via vectorized tree descent —
-        the fast path for scoring large batched-EI candidate pools."""
+        """(mean, std) via the vectorized all-trees flat descent — one
+        gather loop for the whole forest, the fast path for scoring large
+        batched-EI candidate pools and importance sweeps."""
         X = np.asarray(X, dtype=np.float64)
-        preds = np.stack([t.predict_batch(X) for t in self.trees])
+        preds = predict_forest(self.forest, X)  # (T, N)
         return self._moments(preds)
 
     def _moments(self, preds: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

@@ -15,38 +15,70 @@ configurations per round so a vectorized objective
 candidate batch in one simulator pass.  Exploration slots (the default
 config, the initial random design and the random interleave) are filled
 exactly as the sequential schedule would; the remaining slots take the
-**top-q EI** candidates (deduplicated) from one shared candidate pool,
-scored with the vectorized random-forest descent.  At ``q=1`` the batch path
-delegates to :meth:`ask`, so histories are bit-identical to sequential runs.
+**top-q EI** candidates (deduplicated) from one shared candidate pool.
+At ``q=1`` the batch path delegates to :meth:`ask`, so histories are
+bit-identical to sequential runs.
+
+**Compiled hot path (PR 5).**  The default ``acquisition="fused"`` keeps
+the whole model phase array-native: candidate pools are generated directly
+as encoded unit-cube matrices (:meth:`KnobSpace.neighbors_batch` /
+``sample_batch_encoded``), deduplicated in encoded space, and scored +
+top-q-selected by ONE fused function
+(:func:`repro.core.bo.forest_fast.suggest_topq`: batched tree descent,
+moments, vectorized-erf EI and the exact ``select_topk`` kernel — jitted
+under jax, pure numpy otherwise); only the q returned suggestions are
+decoded to dicts.  ``acquisition="legacy"`` preserves the pre-PR-5
+pipeline (per-config dict pools, per-tree descent, ``np.vectorize``'d erf,
+dense argsort) for the before/after overhead benchmark
+(``benchmarks/bo_overhead.py``) and as an oracle in tests.  Suggestion
+histories changed in PR 5 (new forest-randomness and pool protocols — see
+:mod:`repro.core.bo.rf`); they are identical across
+``surrogate="reference"|"fast"`` and regression-tested.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from ..knobs import Config, KnobSpace
-from .rf import RandomForest
+from . import forest_fast
+from .rf import RandomForest, resolve_mode as rf_resolve_mode
 
 
 def _norm_pdf(z: np.ndarray) -> np.ndarray:
-    return np.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+    return forest_fast.norm_pdf(np.asarray(z, dtype=np.float64))
 
 
 def _norm_cdf(z: np.ndarray) -> np.ndarray:
-    # erf-based CDF (no scipy in this environment)
+    # vectorized erf-based CDF (no scipy in this environment); agreement
+    # with math.erf is <= 1e-6 (pinned in tests/test_bo.py)
+    return forest_fast.norm_cdf(z)
+
+
+def _norm_cdf_ref(z: np.ndarray) -> np.ndarray:
+    """Pre-PR-5 CDF: a ``np.vectorize(math.erf)`` Python loop per element.
+    Kept as the numeric oracle for :func:`_norm_cdf` and for the legacy
+    acquisition path's honest cost profile."""
     return 0.5 * (1.0 + np.vectorize(math.erf)(z / math.sqrt(2.0)))
 
 
 def expected_improvement(mean: np.ndarray, std: np.ndarray,
                          best: float) -> np.ndarray:
-    """EI for *minimization*."""
+    """EI for *minimization* (vectorized)."""
+    return forest_fast.expected_improvement(mean, std, best)
+
+
+def expected_improvement_ref(mean: np.ndarray, std: np.ndarray,
+                             best: float) -> np.ndarray:
+    """EI via the pre-PR-5 scalar-erf loop (oracle/legacy path)."""
     std = np.maximum(std, 1e-12)
     z = (best - mean) / std
-    return (best - mean) * _norm_cdf(z) + std * _norm_pdf(z)
+    return (best - mean) * _norm_cdf_ref(z) + std * _norm_pdf(z)
 
 
 @dataclasses.dataclass
@@ -59,7 +91,22 @@ class SMACOptimizer:
     def __init__(self, space: KnobSpace, seed: int = 0,
                  n_init: int = 20, random_prob: float = 0.20,
                  n_candidates: int = 512, n_local_parents: int = 4,
-                 n_trees: int = 24, start_with_default: bool = True):
+                 n_trees: int = 24, start_with_default: bool = True,
+                 surrogate: Optional[str] = None,
+                 acquisition: Optional[str] = None):
+        """``surrogate`` picks the forest builder (``"reference"|"fast"``;
+        None resolves via :data:`repro.core.bo.rf.FORCE`, default fast —
+        both produce bit-identical forests and thus identical suggestion
+        histories).  ``acquisition`` picks the scoring pipeline
+        (``"fused"`` default; ``"legacy"`` is the pre-PR-5 pipeline kept
+        for the overhead benchmark and oracle tests)."""
+        if acquisition not in (None, "fused", "legacy"):
+            raise ValueError(f"unknown acquisition {acquisition!r}; "
+                             "expected 'fused' or 'legacy'")
+        if surrogate is not None:
+            # fail fast (a typo would otherwise only surface after the
+            # whole n_init exploration design has been evaluated)
+            rf_resolve_mode(surrogate)
         self.space = space
         self.rng = np.random.default_rng(seed)
         self.n_init = n_init
@@ -68,8 +115,13 @@ class SMACOptimizer:
         self.n_local_parents = n_local_parents
         self.n_trees = n_trees
         self.start_with_default = start_with_default
+        self.surrogate_mode = surrogate
+        self.acquisition = acquisition or "fused"
         self.observations: List[Observation] = []
         self._surrogate: Optional[RandomForest] = None
+        #: cumulative surrogate-fit wall clock (the tuner's per-round
+        #: fit/acquisition breakdown reads deltas of this)
+        self.fit_s = 0.0
 
     # -- bookkeeping ---------------------------------------------------------
     @property
@@ -124,12 +176,15 @@ class SMACOptimizer:
     # -- surrogate ------------------------------------------------------------
     def surrogate(self) -> RandomForest:
         if self._surrogate is None:
+            t0 = time.perf_counter()
             X = np.stack([self.space.encode(o.config)
                           for o in self.observations])
             y = np.array([o.value for o in self.observations])
             self._surrogate = RandomForest(
                 n_trees=self.n_trees,
-                seed=int(self.rng.integers(2 ** 31))).fit(X, y)
+                seed=int(self.rng.integers(2 ** 31)),
+                mode=self.surrogate_mode).fit(X, y)
+            self.fit_s += time.perf_counter() - t0
         return self._surrogate
 
     # -- suggestion -----------------------------------------------------------
@@ -144,14 +199,32 @@ class SMACOptimizer:
 
         model = self.surrogate()
         best_val = self.best.value
-        cands = self._candidate_pool(self.n_candidates)
-        X = np.stack([self.space.encode(c) for c in cands])
-        mean, std = model.predict(X)
-        ei = expected_improvement(mean, std, best_val)
-        return cands[int(np.argmax(ei))]
+        if self.acquisition == "legacy":
+            cands = self._candidate_pool(self.n_candidates)
+            X = np.stack([self.space.encode(c) for c in cands])
+            mean, std = self._predict_legacy(model, X)
+            ei = expected_improvement_ref(mean, std, best_val)
+            return cands[int(np.argmax(ei))]
+        X = self._candidate_pool_encoded(self.n_candidates)
+        _, sel = forest_fast.suggest_topq(
+            model.forest, X, best_val, model._y_mean, model._y_std, q=1)
+        return self.space.decode_batch(X[sel])[0]
+
+    @staticmethod
+    def _predict_legacy(model: RandomForest,
+                        X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Pre-PR-5 prediction cost profile: one Python-level descent per
+        tree (vs one fused descent for the whole forest).  Same numbers."""
+        preds = np.stack([
+            forest_fast.predict_forest(model.forest, X,
+                                       trees=np.array([t]))[0]
+            for t in range(model.n_trees)])
+        return model._moments(preds)
 
     def _candidate_pool(self, n_candidates: int) -> List[Config]:
-        """Local neighbours of the best parents + fresh uniform samples."""
+        """Pre-PR-5 pool: per-config dicts via scalar neighbour draws.
+        Kept for ``acquisition="legacy"`` (different RNG protocol than the
+        encoded pool, so histories differ between acquisition modes)."""
         parents = sorted(self.observations, key=lambda o: o.value)
         parents = parents[:self.n_local_parents]
         cands: List[Config] = []
@@ -164,6 +237,27 @@ class SMACOptimizer:
         cands.extend(self.space.sample_batch(
             self.rng, max(8, n_candidates - len(cands))))
         return cands
+
+    def _candidate_pool_encoded(self, n_candidates: int) -> np.ndarray:
+        """Local neighbours of the best parents + fresh uniform samples,
+        generated directly as canonical encoded unit rows (no dicts)."""
+        parents = sorted(self.observations, key=lambda o: o.value)
+        parents = parents[:self.n_local_parents]
+        blocks: List[np.ndarray] = []
+        count = 0
+        per_parent = max(4, n_candidates // (2 * len(parents)))
+        for p in parents:
+            x = self.space.encode(p.config)
+            blocks.append(self.space.neighbors_batch(x, self.rng,
+                                                     n=per_parent,
+                                                     scale=0.12))
+            blocks.append(self.space.neighbors_batch(x, self.rng,
+                                                     n=per_parent // 2,
+                                                     scale=0.35))
+            count += per_parent + per_parent // 2
+        blocks.append(self.space.sample_batch_encoded(
+            self.rng, max(8, n_candidates - count)))
+        return np.concatenate(blocks, axis=0)
 
     def ask_batch(self, q: int, include_incumbent: bool = False
                   ) -> List[Config]:
@@ -208,19 +302,33 @@ class SMACOptimizer:
             return out
         model = self.surrogate()
         best_val = self.best.value
-        cands = self._candidate_pool(max(self.n_candidates, 64 * n_model))
-        X = self.space.encode_batch(cands)
-        mean, std = model.predict_batch(X)
-        ei = expected_improvement(mean, std, best_val)
-        seen = set()
-        for i in np.argsort(-ei, kind="stable"):
-            key = tuple(sorted(cands[i].items()))
-            if key in seen:
-                continue
-            seen.add(key)
-            out.append(cands[i])
-            if len(seen) == n_model:
-                break
+        if self.acquisition == "legacy":
+            cands = self._candidate_pool(max(self.n_candidates,
+                                             64 * n_model))
+            X = self.space.encode_batch(cands)
+            mean, std = self._predict_legacy(model, X)
+            ei = expected_improvement_ref(mean, std, best_val)
+            seen = set()
+            for i in np.argsort(-ei, kind="stable"):
+                key = tuple(sorted(cands[i].items()))
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(cands[i])
+                if len(seen) == n_model:
+                    break
+        else:
+            X = self._candidate_pool_encoded(max(self.n_candidates,
+                                                 64 * n_model))
+            # canonical rows are config fixpoints, so deduplication is a
+            # first-occurrence mask in encoded space
+            _, first = np.unique(X, axis=0, return_index=True)
+            valid = np.zeros(len(X), dtype=bool)
+            valid[first] = True
+            _, sel = forest_fast.suggest_topq(
+                model.forest, X, best_val, model._y_mean, model._y_std,
+                valid=valid, q=n_model)
+            out.extend(self.space.decode_batch(X[sel]))
         while len(out) < q:  # pool exhausted by dedup: fall back to random
             out.append(self.space.sample(self.rng))
         return out
@@ -253,6 +361,16 @@ class RandomSearch:
     def best(self) -> Observation:
         return min(self.observations, key=lambda o: o.value)
 
+    def ask(self) -> Config:
+        # same draw schedule as minimize(): default first, then uniform
+        first = len(self.observations) == 0
+        return (self.space.default_config()
+                if first and self.start_with_default
+                else self.space.sample(self.rng))
+
+    def tell(self, config: Mapping[str, Any], value: float) -> None:
+        self.observations.append(Observation(dict(config), float(value)))
+
     def ask_batch(self, q: int, include_incumbent: bool = False
                   ) -> List[Config]:
         # include_incumbent is accepted for interface parity with
@@ -273,11 +391,9 @@ class RandomSearch:
 
     def minimize(self, objective, budget: int = 100, callback=None):
         for i in range(budget):
-            cfg = (self.space.default_config()
-                   if i == 0 and self.start_with_default
-                   else self.space.sample(self.rng))
+            cfg = self.ask()  # same schedule: default first, then uniform
             val = float(objective(cfg))
-            self.observations.append(Observation(cfg, val))
+            self.tell(cfg, val)
             if callback is not None:
                 callback(i, cfg, val)
         return self.best

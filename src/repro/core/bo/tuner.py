@@ -34,10 +34,30 @@ class TuningResult:
     history: List[Observation]
     default_value: float
     wall_s: float
+    #: per-round wall-clock breakdown: each entry has ``ask_s`` (suggestion,
+    #: including the surrogate fit), ``fit_s`` (the surrogate-fit share of
+    #: ask), ``eval_s`` (objective evaluation), ``tell_s`` and ``q`` — the
+    #: receipts for the BO-overhead acceptance claim (BENCH_bo.json)
+    round_times: List[Dict[str, float]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def best(self) -> Observation:
         return min(self.history, key=lambda o: o.value)
+
+    @property
+    def optimizer_overhead_s(self) -> float:
+        """Total ask+tell wall clock (everything that is not evaluation)."""
+        return float(sum(r["ask_s"] + r["tell_s"] for r in self.round_times))
+
+    @property
+    def evaluation_s(self) -> float:
+        return float(sum(r["eval_s"] for r in self.round_times))
+
+    @property
+    def overhead_fraction(self) -> float:
+        """ask/tell overhead as a fraction of evaluation wall clock."""
+        return self.optimizer_overhead_s / max(self.evaluation_s, 1e-12)
 
     @property
     def best_value(self) -> float:
@@ -67,7 +87,8 @@ class TuningSession:
                  batch_size: int = 1,
                  objective_batch: Optional[
                      Callable[[Sequence[Config]], Sequence[float]]] = None,
-                 crn: bool = False):
+                 crn: bool = False, surrogate: Optional[str] = None,
+                 acquisition: Optional[str] = None):
         self.engine = engine
         self.space = space if space is not None else get_space(engine)
         self.objective = objective
@@ -91,7 +112,9 @@ class TuningSession:
         if optimizer == "smac":
             self.optimizer = SMACOptimizer(self.space, seed=seed,
                                            n_init=n_init,
-                                           random_prob=random_prob)
+                                           random_prob=random_prob,
+                                           surrogate=surrogate,
+                                           acquisition=acquisition)
         elif optimizer == "random":
             self.optimizer = RandomSearch(self.space, seed=seed)
         else:
@@ -106,27 +129,51 @@ class TuningSession:
                 print(f"  iter {i + 1:3d}/{self.budget}: f={val:9.2f}s "
                       f"best={best:9.2f}s", flush=True)
 
+        def fit_s() -> float:
+            return float(getattr(self.optimizer, "fit_s", 0.0))
+
+        round_times: List[Dict[str, float]] = []
         if self.batch_size > 1:
             default_value = float(
                 self.objective_batch([self.space.default_config()])[0])
             done = 0
             while done < self.budget:
                 q = min(self.batch_size, self.budget - done)
+                fit0, ta = fit_s(), time.perf_counter()
                 cfgs = self.optimizer.ask_batch(q)
+                te = time.perf_counter()
                 vals = [float(v) for v in self.objective_batch(cfgs)]
+                tt = time.perf_counter()
                 self.optimizer.tell_batch(cfgs, vals, crn=self.crn)
+                tend = time.perf_counter()
+                round_times.append({
+                    "ask_s": te - ta, "fit_s": fit_s() - fit0,
+                    "eval_s": tt - te, "tell_s": tend - tt, "q": float(q)})
                 for j, (cfg, val) in enumerate(zip(cfgs, vals)):
                     cb(done + j, cfg, val)
                 done += q
         else:
+            # the sequential loop, identical to optimizer.minimize() but
+            # with the per-round ask/eval/tell walls recorded
             default_value = float(self.objective(self.space.default_config()))
-            self.optimizer.minimize(self.objective, budget=self.budget,
-                                    callback=cb)
+            for i in range(self.budget):
+                fit0, ta = fit_s(), time.perf_counter()
+                cfg = self.optimizer.ask()
+                te = time.perf_counter()
+                val = float(self.objective(cfg))
+                tt = time.perf_counter()
+                self.optimizer.tell(cfg, val)
+                tend = time.perf_counter()
+                round_times.append({
+                    "ask_s": te - ta, "fit_s": fit_s() - fit0,
+                    "eval_s": tt - te, "tell_s": tend - tt, "q": 1.0})
+                cb(i, cfg, val)
         return TuningResult(
             engine=self.engine, scenario=self.scenario_key,
             budget=self.budget,
             history=list(self.optimizer.observations),
-            default_value=default_value, wall_s=time.time() - t0)
+            default_value=default_value, wall_s=time.time() - t0,
+            round_times=round_times)
 
 
 def tune_scenario(engine: str, scenario, budget: int = 100, seed: int = 0,

@@ -164,6 +164,47 @@ class KnobSpace:
         """Clip N configs into the domain; unknown keys are rejected."""
         return [self.validate(c) for c in configs]
 
+    # -- array-native candidate generation (the BO hot path) -----------------
+    def quantize_unit(self, X: np.ndarray) -> np.ndarray:
+        """Snap unit-cube rows onto the knob grid: ``encode(decode(X))``
+        without the per-config dict round-trip.
+
+        Canonical rows are fixpoints, so two rows are equal iff they decode
+        to the same config — which is what lets the batched optimizer dedup
+        candidates in encoded space before scoring.
+        """
+        X = np.clip(np.asarray(X, dtype=np.float64), 0.0, 1.0)
+        Vt = self._lo_t + X * (self._hi_t - self._lo_t)
+        V = Vt.copy()
+        V[..., self._log] = np.exp(Vt[..., self._log])
+        V = np.clip(V, self._lo, self._hi)
+        V = np.where(self._int, np.round(V), V)
+        Ut = V.copy()
+        Ut[..., self._log] = np.log(np.maximum(V[..., self._log],
+                                               self._lo[self._log]))
+        return (Ut - self._lo_t) / (self._hi_t - self._lo_t)
+
+    def sample_batch_encoded(self, rng: np.random.Generator,
+                             n: int) -> np.ndarray:
+        """``n`` uniform random configs as canonical unit rows ``(n, d)`` —
+        the encoded counterpart of :meth:`sample_batch`, decoded to dicts
+        only for the suggestions the optimizer actually returns."""
+        return self.quantize_unit(rng.uniform(size=(n, len(self))))
+
+    def neighbors_batch(self, x: np.ndarray, rng: np.random.Generator,
+                        n: int = 8, scale: float = 0.15) -> np.ndarray:
+        """``n`` Gaussian local-search neighbours of encoded point ``x`` as
+        canonical unit rows ``(n, d)`` (SMAC local search, batched)."""
+        d = len(self)
+        x = np.asarray(x, dtype=np.float64)
+        U = rng.uniform(size=(n, d))
+        mask = U < max(1.0 / d, 0.3)
+        fix = rng.integers(d, size=n)
+        empty = ~mask.any(axis=1)
+        mask[empty, fix[empty]] = True
+        Z = rng.normal(0.0, scale, size=(n, d))
+        return self.quantize_unit(np.clip(x[None, :] + mask * Z, 0.0, 1.0))
+
     def neighbors(
         self, config: Mapping[str, Any], rng: np.random.Generator, n: int = 8,
         scale: float = 0.15,

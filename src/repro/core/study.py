@@ -146,7 +146,9 @@ class Study:
     def tune(self, budget: int = 100, batch_size: int = 1, seed: int = 0,
              optimizer: str = "smac", n_init: int = 20,
              random_prob: float = 0.20, verbose: bool = False,
-             space: Optional[KnobSpace] = None) -> TuningResult:
+             space: Optional[KnobSpace] = None,
+             surrogate: Optional[str] = None,
+             acquisition: Optional[str] = None) -> TuningResult:
         """SMAC-BO tuning of the spec's engine knobs (§3.1).
 
         ``seed`` seeds the optimizer; the simulation seed stays
@@ -160,6 +162,14 @@ class Study:
         optimizer makes are paired — and ``tell_batch(crn=True)`` debiases
         any re-evaluated config against its recorded value (see
         :meth:`~repro.core.bo.smac.SMACOptimizer.tell_batch`).
+
+        ``surrogate``/``acquisition`` select the optimizer's internal
+        paths (forest builder ``"reference"|"fast"``, scoring pipeline
+        ``"fused"|"legacy"``); the defaults are the compiled hot path.
+        The returned :class:`~repro.core.bo.tuner.TuningResult` records a
+        per-round ask/fit/eval/tell wall-clock breakdown
+        (``round_times``), which ``benchmarks/bo_overhead.py`` turns into
+        the BENCH_bo.json before/after receipts.
         """
         def objective(config: Config) -> float:
             return self.run(configs=[config])[0].total_s
@@ -172,7 +182,8 @@ class Study:
             space=space, optimizer=optimizer, budget=budget, seed=seed,
             n_init=n_init, random_prob=random_prob, batch_size=batch_size,
             objective_batch=objective_batch if batch_size > 1 else None,
-            crn=self.spec.options.crn)
+            crn=self.spec.options.crn, surrogate=surrogate,
+            acquisition=acquisition)
         return session.run(verbose=verbose)
 
     # -- sweep -------------------------------------------------------------

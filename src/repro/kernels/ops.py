@@ -88,6 +88,24 @@ def select_topk(p_mask, p_heat, d_mask, d_heat, n_promote, n_demote,
                      "expected 'pallas', 'ref' or None")
 
 
+def topk_mask(scores, k, valid=None, mode: Optional[str] = None):
+    """Exact top-``k`` boolean mask over a 1-D float32 score vector
+    (descending, page/candidate-index tie-break) — the promote side of
+    :func:`select_topk` with an empty demote side.
+
+    Used by the BO acquisition's top-q-EI step
+    (:func:`repro.core.bo.forest_fast.suggest_topq`) instead of a dense
+    ``np.argsort(-ei)``; ``k`` may be a traced scalar so a jitted caller
+    does not retrace when the batch's model-slot count changes.
+    """
+    s = jnp.asarray(scores, jnp.float32)[None, :]
+    v = jnp.ones(s.shape, bool) if valid is None \
+        else jnp.asarray(valid, bool)[None, :]
+    pm, _ = select_topk(v, s, jnp.zeros(s.shape, bool), jnp.zeros_like(s),
+                        jnp.asarray([k]), jnp.asarray([0]), mode=mode)
+    return pm[0]
+
+
 def page_migrate(dst_pool, src_pool, dst_ids, src_ids):
     if _use_pallas():
         from .page_migrate import page_migrate as pm

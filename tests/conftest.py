@@ -15,3 +15,14 @@ if _force:
             f"REPRO_KERNELS_FORCE must be 'pallas' or 'ref', got {_force!r}")
     from repro.kernels import ops as _kernel_ops
     _kernel_ops.FORCE = _force
+
+# CI surrogate matrix: REPRO_SURROGATE_FORCE=reference|fast pins the BO
+# forest builder (repro.core.bo.rf.FORCE) for the whole session, so both
+# paths run the suite (they must be bit-identical — tests/test_bo.py)
+_sforce = os.environ.get("REPRO_SURROGATE_FORCE")
+if _sforce:
+    if _sforce not in ("reference", "fast"):
+        raise ValueError("REPRO_SURROGATE_FORCE must be 'reference' or "
+                         f"'fast', got {_sforce!r}")
+    from repro.core.bo import rf as _bo_rf
+    _bo_rf.FORCE = _sforce

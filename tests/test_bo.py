@@ -1,4 +1,12 @@
-"""Random-forest surrogate + SMAC optimizer unit/property tests."""
+"""Random-forest surrogate + SMAC optimizer unit/property tests.
+
+PR 5 additions: reference-vs-fast forest parity (bit-identical trees and
+predictions under the shared randomness protocol), suggestion-history
+regression under both surrogate paths, vectorized-erf agreement, and
+``select_topk``-vs-argsort top-q-EI selection equivalence.
+"""
+
+import math
 
 import numpy as np
 import pytest
@@ -7,9 +15,19 @@ try:
 except ImportError:  # tier-1 environments may lack hypothesis
     from _hypothesis_stub import given, settings, st
 
+from repro.core.bo import forest_fast
 from repro.core.bo.rf import RandomForest
-from repro.core.bo.smac import SMACOptimizer, expected_improvement
+from repro.core.bo.smac import (SMACOptimizer, _norm_cdf, _norm_cdf_ref,
+                                expected_improvement,
+                                expected_improvement_ref)
 from repro.core.knobs import HEMEM_SPACE, Knob, KnobSpace
+
+try:
+    import jax  # noqa: F401
+
+    HAS_JAX = True
+except ImportError:
+    HAS_JAX = False
 
 
 def test_rf_fits_simple_function():
@@ -81,3 +99,223 @@ def test_property_ask_always_in_domain(seed):
         for k in HEMEM_SPACE:
             assert k.lo <= cfg[k.name] <= k.hi
         opt.tell(cfg, float(rng.uniform(10, 100)))
+
+
+# ---------------------------------------------------------------------------
+# PR 5: reference-vs-fast forest parity
+# ---------------------------------------------------------------------------
+
+_FLAT_FIELDS = ("feature", "threshold", "left", "right", "value", "n_nodes")
+
+
+def _forest_cases():
+    rng = np.random.default_rng(0)
+    yield rng.uniform(size=(120, 6)), None
+    yield np.tile(rng.uniform(size=(5, 3)), (8, 1)), None       # heavy ties
+    yield rng.uniform(size=(40, 2)), np.ones(40)                # constant y
+    yield (rng.integers(0, 3, size=(60, 5)) / 2.0,
+           rng.normal(size=60))                                 # grid X
+    yield rng.uniform(size=(4, 8)), None                        # tiny n
+
+
+def test_reference_fast_forest_parity_bit_identical():
+    """Both builders produce IDENTICAL flat trees and predictions given
+    identical RNG streams (the PR 5 acceptance contract)."""
+    for i, (X, y) in enumerate(_forest_cases()):
+        if y is None:
+            rng = np.random.default_rng(100 + i)
+            y = X @ rng.normal(size=X.shape[1]) + 0.1 * rng.normal(
+                size=len(X))
+        ref = RandomForest(seed=i, mode="reference").fit(X, y)
+        fast = RandomForest(seed=i, mode="fast").fit(X, y)
+        for f in _FLAT_FIELDS:
+            assert np.array_equal(getattr(ref.forest, f),
+                                  getattr(fast.forest, f)), (i, f)
+        Xt = np.random.default_rng(7).uniform(size=(33, X.shape[1]))
+        for a, b in zip(ref.predict(Xt), fast.predict(Xt)):
+            assert np.array_equal(a, b)
+        for a, b in zip(ref.predict_batch(Xt), fast.predict_batch(Xt)):
+            assert np.array_equal(a, b)
+
+
+def test_flat_descent_matches_per_row_reference_walk():
+    rng = np.random.default_rng(3)
+    X = rng.uniform(size=(90, 4))
+    y = np.sin(5 * X[:, 0]) + X[:, 1] + 0.1 * rng.normal(size=90)
+    ref = RandomForest(seed=3, mode="reference").fit(X, y)
+    Xt = rng.uniform(size=(40, 4))
+    walk = np.stack([t.predict(Xt) for t in ref.trees])
+    assert np.array_equal(walk, forest_fast.predict_forest(ref.forest, Xt))
+
+
+def test_fast_is_the_default_mode():
+    from repro.core.bo import rf
+    assert rf.DEFAULT_MODE == "fast"
+    assert rf.resolve_mode(None) in ("reference", "fast")
+    with pytest.raises(ValueError):
+        rf.resolve_mode("banana")
+
+
+# ---------------------------------------------------------------------------
+# PR 5: suggestion-history regression under both surrogate paths
+# ---------------------------------------------------------------------------
+
+
+def _history(surrogate, q, budget=32, seed=5, **kwargs):
+    def f(cfg):
+        return ((cfg["read_hot_threshold"] - 12) ** 2 * 0.1
+                + np.log(cfg["migration_period"])
+                + cfg["max_migration_rate"] * 0.05)
+
+    opt = SMACOptimizer(HEMEM_SPACE, seed=seed, n_init=6,
+                        surrogate=surrogate, **kwargs)
+    done = 0
+    while done < budget:
+        cfgs = opt.ask_batch(min(q, budget - done))
+        opt.tell_batch(cfgs, [f(c) for c in cfgs])
+        done += len(cfgs)
+    return [(tuple(sorted(o.config.items())), o.value)
+            for o in opt.observations]
+
+
+@pytest.mark.parametrize("q", [1, 8])
+def test_suggestion_history_identical_reference_vs_fast(q):
+    assert _history("reference", q) == _history("fast", q)
+
+
+@pytest.mark.parametrize("q", [1, 8])
+def test_suggestion_history_identical_across_acq_backends(q):
+    """The fused acquisition suggests the same configs whether it runs the
+    jitted jax path or the numpy fallback on these seeded runs (EI keys
+    are f32 with index tie-break on both; the jax path computes in f32 so
+    the agreement is within f32 tolerance, not a bitwise guarantee —
+    near-ties could in principle resolve differently)."""
+    if not HAS_JAX:
+        pytest.skip("jax not installed")
+    old = forest_fast.BACKEND
+    try:
+        forest_fast.BACKEND = "numpy"
+        h_np = _history("fast", q)
+        forest_fast.BACKEND = "jax"
+        h_jax = _history("fast", q)
+    finally:
+        forest_fast.BACKEND = old
+    assert h_np == h_jax
+
+
+def test_legacy_acquisition_still_works_and_stays_in_domain():
+    hist = _history(None, 4, budget=16, acquisition="legacy")
+    assert len(hist) == 16
+    for cfg, _ in hist:
+        for k in HEMEM_SPACE:
+            assert k.lo <= dict(cfg)[k.name] <= k.hi
+
+
+# ---------------------------------------------------------------------------
+# PR 5: vectorized erf / EI numeric agreement (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_vectorized_norm_cdf_matches_math_erf():
+    z = np.linspace(-8.0, 8.0, 4001)
+    exact = 0.5 * (1.0 + np.array([math.erf(v / math.sqrt(2)) for v in z]))
+    assert np.abs(_norm_cdf(z) - exact).max() <= 1e-6
+    assert np.abs(_norm_cdf_ref(z) - exact).max() <= 1e-12
+    # erf itself agrees to 1e-6 too (Abramowitz-Stegun 7.1.26 bound 1.5e-7)
+    ez = np.array([math.erf(v) for v in z])
+    assert np.abs(forest_fast.erf(z) - ez).max() <= 1e-6
+
+
+def test_expected_improvement_within_documented_tolerance_of_reference():
+    """Documented bound: the A-S erf error (<= 1.5e-7) enters EI scaled by
+    |best - mean|, so absolute EI agreement is <= ~5e-6 at O(10) objective
+    scales and relative agreement is tight wherever EI is non-negligible."""
+    rng = np.random.default_rng(0)
+    mean = rng.normal(50, 10, size=512)
+    std = np.abs(rng.normal(0, 5, size=512)) + 1e-6
+    new = expected_improvement(mean, std, best=45.0)
+    ref = expected_improvement_ref(mean, std, best=45.0)
+    assert np.abs(new - ref).max() <= 5e-6
+    big = ref > 0.1
+    assert big.any()
+    assert (np.abs(new - ref)[big] / ref[big]).max() <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# PR 5: top-q-EI selection via select_topk == stable argsort (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+@pytest.mark.parametrize("q", [1, 5, 40])
+def test_topq_ei_select_topk_matches_stable_argsort(q):
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(17)
+    n = 40
+    ei = rng.uniform(0, 1, size=n).astype(np.float32)
+    ei[::4] = ei[1]          # force heavy ties
+    valid = rng.uniform(size=n) < 0.8
+    valid[:2] = True
+    mask = np.asarray(ops.topk_mask(ei, q, valid=valid))
+    order = np.argsort(-ei, kind="stable")
+    expect = [int(i) for i in order if valid[i]][:q]
+    assert set(np.flatnonzero(mask)) == set(expect)
+    # and the full fused path agrees with the numpy fallback's selection
+    X = rng.uniform(size=(64, 4))
+    y = X[:, 0] + 0.1 * rng.normal(size=64)
+    model = RandomForest(seed=1).fit(X, y)
+    pool = rng.uniform(size=(96, 4))
+    _, sel_np = forest_fast.suggest_topq(model.forest, pool, float(y.min()),
+                                         model._y_mean, model._y_std,
+                                         q=6, backend="numpy")
+    _, sel_jax = forest_fast.suggest_topq(model.forest, pool, float(y.min()),
+                                          model._y_mean, model._y_std,
+                                          q=6, backend="jax")
+    assert list(sel_np) == list(sel_jax)
+
+
+# ---------------------------------------------------------------------------
+# PR 5: encoded candidate generation (knobs.py satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_unit_is_encode_decode_fixpoint():
+    rng = np.random.default_rng(2)
+    U = rng.uniform(size=(64, len(HEMEM_SPACE)))
+    Q = HEMEM_SPACE.quantize_unit(U)
+    # canonical rows are fixpoints and decode/encode round-trips agree
+    assert np.array_equal(HEMEM_SPACE.quantize_unit(Q), Q)
+    cfgs = HEMEM_SPACE.decode_batch(Q)
+    assert np.allclose(HEMEM_SPACE.encode_batch(cfgs), Q, atol=1e-12)
+    for c in cfgs:
+        assert c == HEMEM_SPACE.validate(c)
+
+
+def test_encoded_pool_generators_stay_in_domain():
+    rng = np.random.default_rng(4)
+    S = HEMEM_SPACE.sample_batch_encoded(rng, 32)
+    x = HEMEM_SPACE.encode(HEMEM_SPACE.default_config())
+    N = HEMEM_SPACE.neighbors_batch(x, rng, n=16, scale=0.2)
+    for rows in (S, N):
+        assert rows.shape[1] == len(HEMEM_SPACE)
+        assert (rows >= 0).all() and (rows <= 1).all()
+        for c in HEMEM_SPACE.decode_batch(rows):
+            assert c == HEMEM_SPACE.validate(c)
+
+
+def test_knob_importance_identical_across_surrogate_modes():
+    from repro.core.bo.importance import knob_importance
+    from repro.core.bo.smac import Observation
+
+    rng = np.random.default_rng(9)
+    obs = []
+    for _ in range(40):
+        cfg = HEMEM_SPACE.sample(rng)
+        obs.append(Observation(cfg, float(np.log(cfg["migration_period"])
+                                          + 0.1 * cfg["read_hot_threshold"])))
+    a = knob_importance(HEMEM_SPACE, obs, surrogate="reference")
+    b = knob_importance(HEMEM_SPACE, obs, surrogate="fast")
+    assert a == b
+    assert abs(sum(a.values()) - 1.0) < 1e-9
+    assert list(a)[0] in ("migration_period", "read_hot_threshold")

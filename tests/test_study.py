@@ -194,3 +194,30 @@ def test_registered_engine_specs_round_trip():
     spec = _spec("topk-test")
     assert spec.engine.config == {"promote_top_k": 16}
     assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_tune_surrogate_modes_produce_identical_histories():
+    """PR 5: the fast level-synchronous forest and the recursive reference
+    are bit-identical, so full tuning runs agree config-for-config."""
+    results = {}
+    for mode in ("reference", "fast"):
+        res = Study(_spec(sampler="sparse")).tune(
+            budget=8, batch_size=4, seed=3, n_init=4, surrogate=mode)
+        results[mode] = ([o.config for o in res.history],
+                         [o.value for o in res.history])
+    assert results["reference"] == results["fast"]
+
+
+def test_tune_records_round_time_breakdown():
+    res = Study(_spec(sampler="sparse")).tune(budget=6, batch_size=3, seed=1,
+                                              n_init=2)
+    assert len(res.round_times) == 2
+    for r in res.round_times:
+        assert set(r) == {"ask_s", "fit_s", "eval_s", "tell_s", "q"}
+        assert r["eval_s"] > 0 and r["ask_s"] >= r["fit_s"] >= 0
+    assert res.optimizer_overhead_s >= 0
+    assert res.evaluation_s > 0
+    assert res.overhead_fraction < 1.0  # ask/tell is cheaper than evaluation
+    seq = Study(_spec()).tune(budget=2, seed=1, n_init=1)
+    assert len(seq.round_times) == 2
+    assert all(r["q"] == 1.0 for r in seq.round_times)
