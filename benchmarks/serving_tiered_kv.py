@@ -1,81 +1,279 @@
-"""Beyond-paper: the tuned knobs on the REAL JAX serving path.
+"""Compiled tiered-KV serving under replayed request traffic.
 
-Runs the TieredKVCache decode loop (paged-attention kernel + engine-driven
-migrations) under (a) HeMem defaults, (b) a BO-tuned config, (c) no
-migrations, and checks that tuning the SAME Table-2 knobs improves the
-production metric (attention-mass recall at bounded migration cost).
+Three measurements, all on the REAL serving path (paged-attention kernel +
+engine-driven migrations), receipts in ``BENCH_serving.json`` (repo root
+and ``benchmarks/results/``):
+
+1. **Fused-step speedup** — the compiled ``decode_step`` (one jitted
+   append+attend+record call, batched ``page_migrate`` epochs) vs the
+   per-page Python reference loop at batch >= 256, interleaved min-of-N
+   after a warmup step (acceptance: >= 3x).
+2. **Traffic replay** — Poisson and bursty-diurnal request arrivals
+   (:class:`~repro.core.traffic.TrafficSpec`) over hundreds of concurrent
+   sequences with arrivals/completions, reporting p50/p99 modeled decode
+   latency, measured throughput, and attention-mass recall per pattern.
+3. **Knob tuning** — ``Study.tune`` with a custom serving objective
+   (p99 latency / recall over a replay) driving the Table-2 ``HEMEM_SPACE``
+   knobs; acceptance: tuned objective <= 0.98x defaults.
+
+The lifted ``kv-hemem`` engine is also exercised through the simulator's
+``backend="jax"`` path on the registered ``kv-poisson`` workload, asserting
+the compiled dispatch takes it (no numpy-fallback warning).
 """
 
 from __future__ import annotations
 
-import numpy as np
+import json
+import logging
+import os
+import time
+from typing import Dict, List
 
-from repro.core.bo.tuner import TuningSession
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ExperimentSpec, SimOptions, Study
 from repro.core.knobs import HEMEM_SPACE
 from repro.core.tiered_kv import KVSpec, TieredKVCache
+from repro.core.traffic import TrafficSpec, replay_schedule
 
 from .common import claim, print_claims, save
 
+# float32 pools: XLA CPU software-emulates bfloat16, which would inflate
+# the attention cost both arms share and compress the measured ratio
+SPEC = KVSpec(n_layers=2, kv_heads=2, head_dim=16, page_tokens=4,
+              dtype=jnp.float32)
 
-def _run(config, steps=96, migrate=True, seed=7):
+#: modeled serving machine: HBM vs PCIe-host bandwidth + per-step compute.
+#: Latency is modeled at the paper's production page granule (2 MiB), not
+#: the miniature test spec's page size, so residency actually moves the
+#: tail: a non-resident page costs ~65us of PCIe reads vs ~2.6us from HBM.
+NEAR_GBS, FAR_GBS, COMPUTE_MS = 800.0, 32.0, 0.2
+MODEL_PAGE_BYTES = 2 << 20
+
+
+def _page_ms(pages, gbs: float, page_bytes: int = MODEL_PAGE_BYTES):
+    return pages * page_bytes * 1e3 / (gbs * 1e9)
+
+
+def replay(config, traffic: TrafficSpec, *, batch: int, max_pages: int,
+           hbm_frac: float = 0.25, seed: int = 0, compiled: bool = True,
+           engine_every: int = 8, dt_ms: float = 50.0) -> Dict:
+    """Replay one arrival trace through a TieredKVCache; returns latency/
+    recall/throughput stats.  Deterministic in (config, traffic, seed)."""
+    hbm_pages = max(2, int(batch * max_pages * hbm_frac))
+    sched = replay_schedule(traffic, batch,
+                            max_pages * SPEC.page_tokens, seed)
+    cache = TieredKVCache(SPEC, batch, max_pages, hbm_pages, config=config,
+                          compiled=compiled)
     rng = np.random.default_rng(seed)
-    spec = KVSpec(n_layers=2, kv_heads=2, head_dim=16, page_tokens=8)
-    cache = TieredKVCache(spec, batch=2, max_pages_per_seq=48, hbm_pages=12,
-                          config=config)
-    for step in range(steps):
-        k = rng.normal(size=(2, spec.n_layers, spec.kv_heads, spec.head_dim))
-        cache.append(k, k)
-        cache._record_reads()
-        if migrate and step % 8 == 7:
-            cache.step_engine(50.0)
-    return cache
+    k = rng.normal(size=(batch, SPEC.n_layers, SPEC.kv_heads,
+                         SPEC.head_dim)).astype(np.float32)
+    q = rng.normal(size=(batch, SPEC.kv_heads,
+                         SPEC.head_dim)).astype(np.float32)
+    if compiled:       # compile outside the timed loop (shared jit cache)
+        warm = TieredKVCache(SPEC, batch, max_pages, hbm_pages,
+                             config=config, compiled=True)
+        warm.decode_step(k, k, q).block_until_ready()
+        warm.step_engine(dt_ms)
+        warm.reset_seqs(np.ones(batch, bool))
+    lats: List[np.ndarray] = []
+    tokens = 0
+    out = None
+    t0 = time.perf_counter()
+    for t in range(traffic.steps):
+        active = sched["active"][t]
+        if not active.any():
+            continue
+        out = cache.decode_step(k, k, q, active=active)
+        moved = 0
+        if t % engine_every == engine_every - 1:
+            m0 = cache.migrations
+            cache.step_engine(dt_ms)
+            moved = cache.migrations - m0
+        res, tot = cache.last_step_pages
+        res = np.asarray(res, np.float64)
+        tot = np.asarray(tot, np.float64)
+        # modeled per-sequence decode latency: compute floor + resident
+        # pages over HBM + non-resident over PCIe + migration stall
+        lat = (COMPUTE_MS + _page_ms(res, NEAR_GBS)
+               + _page_ms(tot - res, FAR_GBS)
+               + _page_ms(float(moved), FAR_GBS))
+        lats.append(lat[active])
+        tokens += int(active.sum())
+        cache.reset_seqs(sched["done"][t])
+    if out is not None:
+        out.block_until_ready()
+    wall = time.perf_counter() - t0
+    lat = np.concatenate(lats) if lats else np.zeros(1)
+    return {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "recall": cache.recall(),
+        "migrations": cache.migrations,
+        "completed": int(sched["completed"]),
+        "tokens": tokens,
+        "tokens_per_s": tokens / max(wall, 1e-9),
+        "wall_s": wall,
+    }
 
 
-def _objective(config) -> float:
-    cache = _run(config)
-    return 100.0 * (1.0 - cache.recall()) + 0.05 * cache.migrations
+def serving_objective(stats: Dict) -> float:
+    """Lower-is-better serving score: tail latency penalized by recall."""
+    return stats["p99_ms"] / max(stats["recall"], 1e-3)
+
+
+def _speedup(batch: int, steps: int, rounds: int) -> Dict:
+    """Compiled vs Python-loop decode_step wall clock, interleaved
+    min-of-N.  Both arms are warmed to steady state first (3 full page
+    cycles + one engine epoch) so neither measurement includes jit or
+    eager-op compilation."""
+    mp = 8
+    caches = {m: TieredKVCache(SPEC, batch, mp, batch * mp // 4,
+                               compiled=(m == "compiled"))
+              for m in ("compiled", "python")}
+    rng = np.random.default_rng(3)
+    k = rng.normal(size=(batch, SPEC.n_layers, SPEC.kv_heads,
+                         SPEC.head_dim)).astype(np.float32)
+    q = rng.normal(size=(batch, SPEC.kv_heads,
+                         SPEC.head_dim)).astype(np.float32)
+    for c in caches.values():                       # warmup / compile
+        for i in range(3 * SPEC.page_tokens):
+            c.decode_step(k, k, q).block_until_ready()
+        c.step_engine(50.0)
+    best = {m: float("inf") for m in caches}
+    for _ in range(rounds):                         # interleaved min-of-N
+        for m, c in caches.items():
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                out = c.decode_step(k, k, q)
+            out.block_until_ready()
+            best[m] = min(best[m], time.perf_counter() - t0)
+    return {"batch": batch, "steps": steps,
+            "compiled_ms_per_step": best["compiled"] / steps * 1e3,
+            "python_ms_per_step": best["python"] / steps * 1e3,
+            "speedup": best["python"] / best["compiled"]}
+
+
+def _jax_dispatch_check() -> Dict:
+    """Run kv-hemem through the simulator's backend="jax" path on the
+    registered kv-poisson traffic workload; the lifted engine must compile
+    (no numpy-fallback warning)."""
+    records: List[logging.LogRecord] = []
+
+    class _Catch(logging.Handler):
+        def emit(self, r):
+            records.append(r)
+
+    h = _Catch()
+    logging.getLogger("repro.core.simulator").addHandler(h)
+    try:
+        res = Study(ExperimentSpec(
+            engine="kv-hemem", workload="kv-poisson",
+            options=SimOptions(backend="jax"))).run()
+    finally:
+        logging.getLogger("repro.core.simulator").removeHandler(h)
+    fell_back = any("falling back" in r.getMessage() for r in records)
+    return {"total_s": res.total_s, "fallback_warned": fell_back}
 
 
 def run(quick: bool = False) -> dict:
-    budget = 12 if quick else 30
-    session = TuningSession("hemem", _objective,
-                            scenario_key="tiered-kv-serving",
-                            budget=budget, seed=0, n_init=max(6, budget // 3))
-    res = session.run()
+    if quick:
+        traffic_steps, batch, mp = 192, 64, 8
+        tune_budget, tune_steps, tune_batch = 10, 96, 32
+        sp_steps, sp_rounds = 3, 2
+    else:
+        traffic_steps, batch, mp = 512, 288, 8
+        tune_budget, tune_steps, tune_batch = 24, 160, 48
+        sp_steps, sp_rounds = 6, 3
 
-    default_cache = _run(HEMEM_SPACE.default_config())
-    tuned_cache = _run(res.best.config)
-    frozen_cache = _run(HEMEM_SPACE.default_config(), migrate=False)
-
-    out = {
-        "default": {"recall": default_cache.recall(),
-                    "migrations": default_cache.migrations,
-                    "objective": res.default_value},
-        "tuned": {"recall": tuned_cache.recall(),
-                  "migrations": tuned_cache.migrations,
-                  "objective": res.best_value,
-                  "config": res.best.config},
-        "no_migration": {"recall": frozen_cache.recall()},
+    default = HEMEM_SPACE.default_config()
+    patterns = {
+        "poisson": TrafficSpec(pattern="poisson", arrival_rate=batch / 24,
+                               steps=traffic_steps),
+        "bursty-diurnal": TrafficSpec(pattern="bursty-diurnal",
+                                      arrival_rate=batch / 24,
+                                      steps=traffic_steps),
     }
-    for k in ("default", "tuned", "no_migration"):
-        print(f"  {k:14s} recall={out[k]['recall']:.3f} "
-              f"migs={out[k].get('migrations', 0)}", flush=True)
+
+    print("  fused-step speedup (batch=256)...", flush=True)
+    speed = _speedup(batch=256, steps=sp_steps, rounds=sp_rounds)
+    print(f"    compiled {speed['compiled_ms_per_step']:.2f} ms/step vs "
+          f"python {speed['python_ms_per_step']:.2f} -> "
+          f"{speed['speedup']:.1f}x", flush=True)
+
+    out: Dict = {"speedup": speed, "traffic": {}, "spec": {
+        "kv": {"n_layers": SPEC.n_layers, "kv_heads": SPEC.kv_heads,
+               "head_dim": SPEC.head_dim, "page_tokens": SPEC.page_tokens},
+        "batch": batch, "max_pages": mp,
+        "patterns": {k: v.to_json() for k, v in patterns.items()}}}
+    for name, tr in patterns.items():
+        stats = replay(default, tr, batch=batch, max_pages=mp, seed=11)
+        out["traffic"][name] = stats
+        print(f"    {name:15s} p50={stats['p50_ms']:.2f}ms "
+              f"p99={stats['p99_ms']:.2f}ms recall={stats['recall']:.3f} "
+              f"{stats['tokens_per_s']:.0f} tok/s", flush=True)
+
+    # -- Study.tune with the embedded replayable serving objective ---------
+    tune_traffic = TrafficSpec(pattern="bursty-diurnal",
+                               arrival_rate=tune_batch / 24,
+                               steps=tune_steps)
+
+    def objective(config) -> float:
+        return serving_objective(replay(config, tune_traffic,
+                                        batch=tune_batch, max_pages=mp,
+                                        seed=5))
+
+    study = Study(ExperimentSpec(engine="kv-hemem", workload="kv-poisson"))
+    res = study.tune(budget=tune_budget, seed=0,
+                     n_init=max(4, tune_budget // 3), objective=objective)
+    out["tuning"] = {
+        "budget": tune_budget, "default_objective": res.default_value,
+        "tuned_objective": res.best_value, "best_config": res.best.config,
+        "traffic": tune_traffic.to_json(),
+    }
+    print(f"    tuned objective {res.default_value:.2f} -> "
+          f"{res.best_value:.2f}", flush=True)
+
+    out["jax_dispatch"] = _jax_dispatch_check()
 
     claims = [
-        claim("serving: engine-driven migration beats frozen placement",
-              out["tuned"]["recall"] > out["no_migration"]["recall"] + 0.02,
-              f"tuned recall {out['tuned']['recall']:.3f} vs frozen "
-              f"{out['no_migration']['recall']:.3f}"),
-        claim("serving: BO-tuning the Table-2 knobs improves the real "
-              "serving objective over defaults",
+        claim("serving: fused compiled step >= 3x over the Python loop "
+              "at batch 256",
+              speed["speedup"] >= 3.0,
+              f"{speed['speedup']:.1f}x "
+              f"({speed['python_ms_per_step']:.2f} -> "
+              f"{speed['compiled_ms_per_step']:.2f} ms/step)"),
+        claim("serving: traffic replay reports tail latency + recall "
+              "under both arrival patterns",
+              all(out["traffic"][p]["completed"] > 0
+                  and out["traffic"][p]["p99_ms"]
+                  >= out["traffic"][p]["p50_ms"]
+                  for p in patterns),
+              ", ".join(f"{p}: p99={out['traffic'][p]['p99_ms']:.2f}ms "
+                        f"recall={out['traffic'][p]['recall']:.3f}"
+                        for p in patterns)),
+        claim("serving: BO-tuning the Table-2 knobs improves the "
+              "p99/recall serving objective (<= 0.98x default)",
               res.best_value <= res.default_value * 0.98,
-              f"objective {res.default_value:.1f} -> {res.best_value:.1f}"),
+              f"objective {res.default_value:.2f} -> {res.best_value:.2f}"),
+        claim("serving: lifted kv-hemem engine compiles under "
+              "backend='jax' (no numpy-fallback warning)",
+              not out["jax_dispatch"]["fallback_warned"],
+              f"sim total_s={out['jax_dispatch']['total_s']:.1f}"),
     ]
     out["claims"] = claims
     print_claims(claims)
     save("serving_tiered_kv", out)
+    # the acceptance artifact also lives at the repo root
+    root = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serving.json")
+    with open(root, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+        f.write("\n")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv)

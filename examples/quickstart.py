@@ -26,6 +26,16 @@ The experiment is fully described by one JSON-round-trippable
 ``ExperimentSpec``; see ``examples/legacy_quickstart.py`` for the
 deprecated pre-PR-2 call pattern.
 
+The same Study API also drives the REAL serving path (PR 6): engines that
+implement the lifted protocol (``repro.core.engine_jax.register_jax_engine``;
+``kv-hemem`` ships) compile end-to-end under ``backend="jax"``, and
+``TieredKVCache(compiled=True)`` runs decode as ONE fused jit (append +
+paged attention + read recording) with batched ``page_migrate`` epochs —
+bit-identically to the per-page Python loop.  ``Study.tune(objective=...)``
+accepts a custom objective, e.g. a p99-latency/recall score over a
+replayable ``TrafficSpec`` arrival trace; see ``examples/tune_serving.py``
+and ``python -m benchmarks.serving_tiered_kv``.
+
 The optimizer itself runs its compiled hot path by default (PR 5): the
 random-forest surrogate is grown level-synchronously into flat arrays and
 EI acquisition is one fused vectorized pass (jitted on TPU hosts) ending in

@@ -1,44 +1,44 @@
-"""Tune the TieredKVCache knobs with SMAC against the REAL serving path
-(the JaxBackend of DESIGN.md): the objective is attention-mass recall
-shortfall + migration cost on an actual decode loop.
+"""Tune the TieredKVCache knobs against the REAL serving path through the
+typed Study API: ``Study.tune(objective=...)`` drives the Table-2 HeMem
+knob space while the objective replays an embedded, JSON-round-trippable
+:class:`~repro.core.traffic.TrafficSpec` through the compiled decode loop
+(fused append + paged-attention + read-recording jit) and scores
+p99 latency / recall.
 
     PYTHONPATH=src python examples/tune_serving.py [--budget 20]
 """
 import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-import numpy as np
-
+from repro.core import ExperimentSpec, Study
 from repro.core.knobs import HEMEM_SPACE
-from repro.core.bo.tuner import TuningSession
-from repro.core.tiered_kv import KVSpec, TieredKVCache
+from repro.core.traffic import TrafficSpec
 
-
-def serving_objective(config) -> float:
-    rng = np.random.default_rng(7)
-    spec = KVSpec(n_layers=2, kv_heads=2, head_dim=16, page_tokens=8)
-    cache = TieredKVCache(spec, batch=2, max_pages_per_seq=48, hbm_pages=12,
-                          config=config)
-    for step in range(96):
-        k = rng.normal(size=(2, spec.n_layers, spec.kv_heads, spec.head_dim))
-        cache.append(k, k)
-        cache._record_reads()
-        if step % 8 == 7:
-            cache.step_engine(50.0)
-    # cost = missed attention mass + migration bandwidth penalty
-    miss = 1.0 - cache.recall()
-    return 100.0 * miss + 0.05 * cache.migrations
+from benchmarks.serving_tiered_kv import replay, serving_objective
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", type=int, default=20)
+    ap.add_argument("--pattern", choices=("poisson", "bursty-diurnal"),
+                    default="bursty-diurnal")
     args = ap.parse_args()
-    session = TuningSession("hemem", serving_objective,
-                            scenario_key="tiered-kv-serving",
-                            budget=args.budget, seed=0, n_init=8)
-    res = session.run(verbose=True)
+
+    traffic = TrafficSpec(pattern=args.pattern, arrival_rate=32 / 24,
+                          steps=96)
+    print(f"traffic: {traffic.to_json()}\n")
+
+    def objective(config) -> float:
+        stats = replay(config, traffic, batch=32, max_pages=8, seed=5)
+        return serving_objective(stats)
+
+    # the spec names the engine whose knob space is tuned; the serving
+    # replay above replaces the simulator objective
+    study = Study(ExperimentSpec(engine="kv-hemem", workload="kv-poisson"))
+    res = study.tune(budget=args.budget, seed=0, n_init=8,
+                     objective=objective, verbose=True)
     print(f"\ndefault objective: {res.default_value:.2f}")
     print(f"tuned   objective: {res.best_value:.2f} "
           f"({res.improvement:.2f}x better)")

@@ -20,6 +20,7 @@ from .registry import (BACKENDS, ENGINES, MACHINES, SAMPLERS, WORKLOADS,
                        register_machine, register_sampler, register_workload)
 from .specs import EngineSpec, ExperimentSpec, SimOptions, WorkloadSpec
 from .study import Study, SweepResult
+from .traffic import TrafficSpec  # noqa: F401  (registers kv-* workloads)
 
 __all__ = [
     "BACKENDS", "ENGINES", "MACHINES", "SAMPLERS", "WORKLOADS", "Registry",

@@ -63,6 +63,7 @@ from typing import Any, List, Mapping, Sequence, Union
 
 import numpy as np
 
+from .knobs import HEMEM_SPACE
 from .pages import (BatchTierState, MigrationPlan, TierState,
                     migration_rate_pages)
 from .registry import (ENGINES as ENGINE_REGISTRY, SAMPLERS, register_engine,
@@ -343,6 +344,33 @@ class BatchHeMemEngine(BatchTieringEngine):
                 if n_promote > 0 else np.zeros(0, dtype=np.int64)
             plans.append(MigrationPlan(promote=promote, demote=demote))
         return plans
+
+
+def _mean_draw(rng, base, period):
+    """Deterministic mean 'sampler': exactly ``base / period`` accesses per
+    page, no dispersion.  The monitoring model of the tiered-KV serving
+    engine, whose per-page access counts (attention mass) are measured
+    exactly by the attention kernel rather than PEBS-sampled."""
+    return np.asarray(base, dtype=np.float64) / float(period)
+
+
+# ---------------------------------------------------------------------------
+# kv-hemem — the TieredKVCache's HeMem analog (serving).  Same Table-2
+# machinery as HeMem; monitoring is deterministic mean sampling (see
+# _mean_draw).  The compiled counterpart is the *lifted*
+# engine_jax.KVHeMemDef, so backend="jax" compiles this engine instead of
+# warning and falling back.
+# ---------------------------------------------------------------------------
+@register_engine("kv-hemem", space=HEMEM_SPACE)
+class BatchKVHeMemEngine(BatchHeMemEngine):
+    """Batched kv-hemem: :class:`BatchHeMemEngine` with deterministic mean
+    monitoring draws (the registered ``sampler`` is accepted but unused —
+    serving measures its access counts exactly)."""
+
+    def __init__(self, configs, btier, seeds: SeedLike = 0,
+                 sampler: str = "elementwise"):
+        super().__init__(configs, btier, seeds, sampler)
+        self._draw = _mean_draw
 
 
 # ---------------------------------------------------------------------------

@@ -87,9 +87,11 @@ def have_jax() -> bool:
             _HAVE_JAX = False
     return _HAVE_JAX
 
-#: engines this module can compile end-to-end; anything else falls back to
-#: the numpy epoch loop (with the vmapped jax cost model, as before)
-JAX_ENGINES = ("hemem", "hmsdk", "memtis", "static", "oracle")
+#: the BUILTIN engines this module compiles end-to-end.  The live registry
+#: is ``jax_engines()`` — custom engines join it through the lifted-engine
+#: protocol (:func:`register_jax_engine`); anything not registered there
+#: falls back to the numpy epoch loop (with the vmapped jax cost model).
+JAX_ENGINES = ("hemem", "hmsdk", "memtis", "static", "oracle", "kv-hemem")
 #: builtin sampler names the fused kernels cover.  "elementwise" and
 #: "sparse" are *stream* variants of the same distribution in numpy, so the
 #: compiled path implements them with one kernel.
@@ -435,7 +437,41 @@ def _truncate_to_rate(n_promote, n_d, room, rate_pages):
 
 
 class _EngineDef:
-    """Bundle of the pure functions defining one compiled engine."""
+    """Bundle of the pure functions defining one compiled engine — the
+    **lifted-engine protocol**.
+
+    A registered engine that also registers an ``_EngineDef`` subclass via
+    :func:`register_jax_engine` gets the whole ``lax.scan``/jit/CRN/pmap
+    machinery for free under ``backend="jax"`` instead of the warned
+    numpy-epoch-loop fallback.  The contract (all methods pure — no Python
+    side effects, jax ops only, shapes fixed by ``(B, n)``):
+
+    ``knobs(configs) -> dict``
+        Per-config knob vectors / static arrays from the B config dicts
+        (numpy; traced as jit inputs, so new configs never retrace).  Must
+        include ``"rate"`` (GiB/s migration cap; ``super().knobs`` provides
+        it).
+    ``init(kv) -> state``
+        Initial engine-state pytree of ``(B, ...)`` arrays.
+    ``observe(state, kv, keys, e, reads, writes, est_wall)
+      -> (state, samples)``
+        Fold one epoch of true per-page access counts into the monitoring
+        state; ``samples`` is the per-row sampling volume ``(B,)`` the cost
+        model charges.  Monitoring noise must come from the counter-based
+        hashes (:func:`counter_uniform` keyed on ``keys``/``e``) so scan,
+        eager replay and sharding agree bitwise.
+    ``plan(state, kv, keys, e, reads, writes, in_fast, allocated,
+      est_wall, max_pages) -> (state, promote_mask, demote_mask,
+      overhead_ms)``
+        One migration-thread step: boolean ``(B, n)`` selection masks
+        (use :meth:`select` for exact rate-capped top-k) plus per-row
+        kernel-overhead ms.
+
+    Class attributes: ``plans = False`` skips ``plan`` entirely (static
+    placement); ``zero_cost = True`` charges no migration bandwidth
+    (oracle-style analysis).  The driver overwrites ``page_bytes`` with the
+    workload's page granule before building the step.
+    """
 
     zero_cost = False
     plans = True
@@ -536,8 +572,14 @@ class _HeMemDef(_EngineDef):
         return {"rc": z, "wc": z, "cursor": jnp.zeros(B, dtype=jnp.int32),
                 "since": zb, "credit": zb}
 
+    def _draws(self, kv, keys, e, reads, writes):
+        """Monitoring-noise hook: sampled (reads, writes), both ``(B, n)``.
+        The default is the fused counter-based Poisson PEBS model;
+        :class:`KVHeMemDef` overrides it with deterministic means."""
+        return monitor_draw2(keys, e, reads, writes, kv["sp"], kv["wsp"])
+
     def observe(self, st, kv, keys, e, reads, writes, est_wall):
-        sr, sw = monitor_draw2(keys, e, reads, writes, kv["sp"], kv["wsp"])
+        sr, sw = self._draws(kv, keys, e, reads, writes)
         samples = (sr + sw) @ jnp.ones(self.n, jnp.float32)
         since = st["since"] + samples
         k = jnp.floor(since / kv["trigger"]).astype(jnp.int32)
@@ -770,13 +812,77 @@ class _HMSDKDef(_EngineDef):
         return st, pmask, dmask, jnp.zeros(self.B, dtype=jnp.float32)
 
 
+class KVHeMemDef(_HeMemDef):
+    """The tiered-KV cache's HeMem analog — the first **lifted** engine.
+
+    Identical cooling/threshold/ring/rate machinery to :class:`_HeMemDef`,
+    but monitoring is **deterministic mean sampling**: the serving path
+    measures per-page attention mass *exactly* (the paged-attention kernel
+    computes it), so there is no PEBS interrupt noise to emulate —
+    ``sampled = true_counts / sampling_period``.  Determinism is also what
+    lets the compiled serving step be pinned bit-identical to the eager
+    Python ``TieredKVCache`` loop (same jnp ops, jit vs eager).
+    """
+
+    def _draws(self, kv, keys, e, reads, writes):
+        sr = reads.astype(jnp.float32)[None, :] / kv["sp"][:, None]
+        sw = writes.astype(jnp.float32)[None, :] / kv["wsp"][:, None]
+        return sr, sw
+
+
+#: name -> _EngineDef subclass; the compiled-path registry behind
+#: supports()/_build_run_fn.  Builtins are seeded here; anything else goes
+#: through register_jax_engine (the lifted-engine protocol).
 _ENGINE_DEFS = {
     "hemem": _HeMemDef,
     "hmsdk": _HMSDKDef,
     "memtis": _MemtisDef,
     "static": _StaticDef,
     "oracle": _OracleDef,
+    "kv-hemem": KVHeMemDef,
 }
+
+#: public alias of the lifted-engine protocol base class
+EngineDef = _EngineDef
+
+
+def register_jax_engine(name: str, def_cls: "type | None" = None, *,
+                        overwrite: bool = False):
+    """Register an :class:`EngineDef` subclass as the compiled (lifted)
+    implementation of engine ``name``; usable as a decorator.
+
+    Pair it with ``@register_engine(name)`` on the numpy side: the numpy
+    batch engine remains the ``backend="numpy"`` implementation and the
+    lifted def compiles the same policy under ``backend="jax"`` — once both
+    are registered, :func:`supports` returns True and the simulator stops
+    warning/falling back to the numpy epoch loop for this engine.
+
+        @register_jax_engine("my-policy")
+        class MyPolicyDef(EngineDef):
+            def plan(self, st, kv, keys, e, reads, writes, in_fast,
+                     allocated, est_wall, max_pages):
+                ...
+
+    See :class:`EngineDef` for the observe/plan purity contract.
+    """
+    def _add(cls: type) -> type:
+        if not (isinstance(cls, type) and issubclass(cls, _EngineDef)):
+            raise TypeError(f"lifted engine {name!r} must be an EngineDef "
+                            f"subclass, got {cls!r}")
+        if name in _ENGINE_DEFS and not overwrite:
+            raise ValueError(
+                f"lifted engine {name!r} is already registered "
+                f"(to {_ENGINE_DEFS[name]!r}); pass overwrite=True to "
+                f"replace it")
+        _ENGINE_DEFS[name] = cls
+        return cls
+
+    return _add if def_cls is None else _add(def_cls)
+
+
+def jax_engines() -> Tuple[str, ...]:
+    """Names with a registered lifted def (compiled under backend='jax')."""
+    return tuple(sorted(_ENGINE_DEFS))
 
 
 #: page-count ceiling of the compiled path (the packed boundary cumsum

@@ -154,6 +154,8 @@ def _as_machine(machine: "Machine | str") -> Machine:
 _PAGE_SEMANTIC_KNOBS = {
     "hemem": ("cooling_pages", "hot_ring_reqs_threshold",
               "cold_ring_reqs_threshold"),
+    "kv-hemem": ("cooling_pages", "hot_ring_reqs_threshold",
+                 "cold_ring_reqs_threshold"),
     "hmsdk": ("nr_regions",),
     "memtis": (),
     "static": (),
@@ -361,12 +363,13 @@ _JAX_FALLBACK_WARNED: set = set()
 
 def _warn_jax_fallback(engine_name: str, sampler: str, n_pages: int) -> None:
     """One-line warning when ``backend="jax"`` silently cannot compile the
-    requested combination and the numpy epoch loop runs instead (custom
-    engines are the ROADMAP follow-up; the vmapped jax cost model still
-    applies)."""
-    if engine_name not in engine_jax.JAX_ENGINES:
-        reason = (f"engine {engine_name!r} is not one of the compiled "
-                  f"builtins {engine_jax.JAX_ENGINES}")
+    requested combination and the numpy epoch loop runs instead (the
+    vmapped jax cost model still applies)."""
+    lifted = engine_jax.jax_engines()
+    if engine_name not in lifted:
+        reason = (f"engine {engine_name!r} has no lifted jax definition "
+                  f"(compiled: {lifted}); register one with "
+                  f"engine_jax.register_jax_engine to compile it")
     elif sampler not in engine_jax.JAX_SAMPLERS:
         reason = (f"sampler {sampler!r} is not one of the fused builtins "
                   f"{engine_jax.JAX_SAMPLERS}")
@@ -525,6 +528,31 @@ _POOL = None
 _POOL_SIZE = 0
 
 
+def compile_cache_dir() -> str:
+    """The XLA persistent-compilation-cache directory shipped to worker
+    shards (and honoured by the parent when it sets the env itself).
+
+    ``JAX_COMPILATION_CACHE_DIR`` overrides; the default is a stable
+    per-user path under the system temp dir so successive pools — and
+    successive *processes* — warm-start instead of re-jitting the epoch
+    loop per worker."""
+    import tempfile
+    d = os.environ.get("JAX_COMPILATION_CACHE_DIR") or os.path.join(
+        tempfile.gettempdir(), f"repro-xla-cache-{os.getuid()}")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def _worker_init(cache_dir: str) -> None:
+    """Pool initializer: point the worker's (not-yet-imported) jax at the
+    shared XLA compile cache.  Runs before any shard work, so the env is in
+    place when the worker first imports jax and every compilation it would
+    repeat lands as a disk hit instead."""
+    os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", cache_dir)
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
+
+
 def _get_pool(workers: int):
     global _POOL, _POOL_SIZE
     # a larger warm pool serves smaller requests (e.g. a tuning run's partial
@@ -541,8 +569,9 @@ def _get_pool(workers: int):
         use_fork = "fork" in mp.get_all_start_methods() and \
             "jax" not in sys.modules
         ctx = mp.get_context("fork" if use_fork else "spawn")
-        _POOL = concurrent.futures.ProcessPoolExecutor(max_workers=workers,
-                                                       mp_context=ctx)
+        _POOL = concurrent.futures.ProcessPoolExecutor(
+            max_workers=workers, mp_context=ctx,
+            initializer=_worker_init, initargs=(compile_cache_dir(),))
         _POOL_SIZE = workers
     return _POOL
 
@@ -636,14 +665,16 @@ def run_simulation_cells(cells,
         return [[] for _ in range(n_cells)]
     workers = _resolve_workers(workers, total)
     if workers > 1 and backend == "jax":
-        # results are identical either way, but each spawned worker re-jits
-        # the epoch loop for its shard shape (seconds per worker) while the
-        # compiled path already parallelizes in-process
+        # results are identical either way; worker processes share the XLA
+        # persistent compile cache (see _worker_init), so only the first
+        # pool ever compiles a given shard shape — later workers and later
+        # pools warm-start from disk
         import logging
-        logging.getLogger(__name__).warning(
-            "sharding a jax-backend batch over %d worker processes re-jits "
-            "per worker; prefer workers=1 with "
-            "XLA_FLAGS=--xla_force_host_platform_device_count=N", workers)
+        logging.getLogger(__name__).info(
+            "sharding a jax-backend batch over %d worker processes; shards "
+            "warm-start from the shared XLA compile cache at %s "
+            "(first-ever run per shape still compiles once per worker)",
+            workers, compile_cache_dir())
     if workers == 1:
         return [_run_batch_local(wl, eng, cfgs, machine, fast_slow_ratio,
                                  cell_seeds[i], sampler, record_heatmap,

@@ -148,7 +148,9 @@ class Study:
              random_prob: float = 0.20, verbose: bool = False,
              space: Optional[KnobSpace] = None,
              surrogate: Optional[str] = None,
-             acquisition: Optional[str] = None) -> TuningResult:
+             acquisition: Optional[str] = None,
+             objective: Optional[Any] = None,
+             objective_batch: Optional[Any] = None) -> TuningResult:
         """SMAC-BO tuning of the spec's engine knobs (§3.1).
 
         ``seed`` seeds the optimizer; the simulation seed stays
@@ -170,12 +172,23 @@ class Study:
         per-round ask/fit/eval/tell wall-clock breakdown
         (``round_times``), which ``benchmarks/bo_overhead.py`` turns into
         the BENCH_bo.json before/after receipts.
-        """
-        def objective(config: Config) -> float:
-            return self.run(configs=[config])[0].total_s
 
-        def objective_batch(configs: Sequence[Config]) -> List[float]:
-            return [r.total_s for r in self.run(configs=configs)]
+        ``objective`` (``config -> float``, lower is better) replaces the
+        default simulate-the-spec objective with a custom one — e.g. the
+        serving benchmark's latency+recall score over a ``TieredKVCache``
+        traffic replay — while the spec keeps recording *what* is tuned
+        (engine name resolves the knob space, ``self.key`` the scenario).
+        ``objective_batch`` (``[config] -> [float]``) is its vectorized
+        counterpart, used when ``batch_size > 1``.
+        """
+        if objective is None:
+            def objective(config: Config) -> float:
+                return self.run(configs=[config])[0].total_s
+
+            if objective_batch is None:
+                def objective_batch(configs: Sequence[Config]
+                                    ) -> List[float]:
+                    return [r.total_s for r in self.run(configs=configs)]
 
         session = TuningSession(
             self.spec.engine.name, objective, scenario_key=self.key,

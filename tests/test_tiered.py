@@ -43,7 +43,7 @@ def test_tiered_kv_engine_keeps_hot_pages_resident():
         for step in range(180):
             k = rng.normal(size=(1, 1, 1, 8))
             cache.append(k, k)
-            cache._record_reads()
+            cache.record_reads()
             if migrate and step % 10 == 9:
                 cache.step_engine(100.0)
         return cache
