@@ -36,6 +36,29 @@ accepts a custom objective, e.g. a p99-latency/recall score over a
 replayable ``TrafficSpec`` arrival trace; see ``examples/tune_serving.py``
 and ``python -m benchmarks.serving_tiered_kv``.
 
+**Async tuning & resume** (PR 7): ``--executor async`` hands the study to
+the asynchronous trial-executor service — ``--slots N`` evaluation slots
+stay saturated with trials (no per-round barrier), ``--scheduler asha``
+adds successive-halving early stopping over ¼/½/full-epoch rungs (on the
+jax backend promoted trials resume mid-run from the epoch-loop
+checkpoint), and ``--journal study.jsonl`` records every ask/eval/rung/
+tell decision as replayable JSON lines.  A killed study picks up exactly
+where it died::
+
+    PYTHONPATH=src python examples/quickstart.py --backend jax \\
+        --executor async --slots 8 --scheduler asha --journal study.jsonl
+    # ... SIGKILL it mid-run, then:
+    PYTHONPATH=src python examples/quickstart.py --backend jax \\
+        --executor async --slots 8 --scheduler asha --journal study.jsonl \\
+        --resume
+
+The control loop is deterministic (every decision happens at canonical
+commit order, not wall-clock arrival), so the resumed journal, trial
+table and incumbent are byte/bit-identical to an uninterrupted run —
+and ``--executor async --slots 1`` reproduces the synchronous path's
+incumbent bit-identically.  Receipts: ``python -m benchmarks.study_async``
+-> ``BENCH_study.json``; journal schema: ``tools/journal_schema.py``.
+
 The optimizer itself runs its compiled hot path by default (PR 5): the
 random-forest surrogate is grown level-synchronously into flat arrays and
 EI acquisition is one fused vectorized pass (jitted on TPU hosts) ending in
@@ -73,6 +96,18 @@ def main():
                     help="common random numbers: all candidates of a batch "
                          "see identical monitoring noise (requires "
                          "--backend jax)")
+    ap.add_argument("--executor", choices=("sync", "async"), default="sync",
+                    help="'async' = slot-saturating trial executor "
+                         "(repro.core.tune_service)")
+    ap.add_argument("--slots", type=int, default=1,
+                    help="async evaluation slots (--executor async)")
+    ap.add_argument("--scheduler", choices=("asha",), default=None,
+                    help="ASHA successive-halving early stopping "
+                         "(--executor async)")
+    ap.add_argument("--journal", default=None,
+                    help="JSON-lines study journal path (--executor async)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed study from --journal")
     args = ap.parse_args()
     workers = args.workers if args.workers == "auto" else int(args.workers)
 
@@ -84,11 +119,28 @@ def main():
                            else "elementwise", workers=workers,
                            backend=args.backend, crn=args.crn))
     study = Study(spec)
-    mode = f"batch q={args.batch_size}" if args.batch_size > 1 else "sequential"
+    if args.executor == "async":
+        mode = f"async slots={args.slots}" + \
+            (f" +{args.scheduler}" if args.scheduler else "")
+    elif args.batch_size > 1:
+        mode = f"batch q={args.batch_size}"
+    else:
+        mode = "sequential"
     print(f"Tuning HeMem for {study.key} (budget {args.budget}, {mode})...")
     print(f"spec: {json.dumps(spec.to_dict())}\n")
-    res = study.tune(budget=args.budget, batch_size=args.batch_size, seed=0,
-                     verbose=True)
+    if args.executor == "async":
+        res = study.tune(budget=args.budget, seed=0, verbose=True,
+                         executor="async", slots=args.slots,
+                         scheduler=args.scheduler, journal=args.journal,
+                         resume=args.resume)
+        print(f"\ntrials: {len(res.trials)} "
+              f"({res.n_stopped_early} stopped early, "
+              f"{res.n_failed} failed) | slot utilization "
+              f"{res.utilization:.2f}"
+              + (f" | journal: {args.journal}" if args.journal else ""))
+    else:
+        res = study.tune(budget=args.budget, batch_size=args.batch_size,
+                         seed=0, verbose=True)
     print(f"\ndefault: {res.default_value:8.1f}s")
     print(f"best:    {res.best_value:8.1f}s   ({res.improvement:.2f}x)")
     print("\nbest config (changes vs default):")

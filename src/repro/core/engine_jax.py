@@ -971,18 +971,45 @@ def _build_step(edef: "_EngineDef", const, page_bytes, scale,
     return step
 
 
+def init_carry(edef: "_EngineDef", kv, keys, est0):
+    """The epoch-0 scan carry: ``(in_fast (B, n), allocated (n,), est_wall
+    (B,), engine state pytree, cum_migrations (B,), row keys (B,))``.
+
+    The carry is an explicit input/output of the compiled scan driver so an
+    epoch loop can be CHECKPOINTED mid-run and resumed (the tune service's
+    partial-budget trials): running epochs ``[0, k)`` and then ``[k, E)``
+    from the returned carry is bitwise identical to one unsegmented run,
+    because every monitoring draw is keyed by the *absolute* epoch index
+    carried in the ``xs`` epoch-id stream, not by scan position.
+    """
+    B, n = edef.B, edef.n
+    return (jnp.zeros((B, n), dtype=bool), jnp.zeros(n, dtype=bool),
+            jnp.asarray(est0, dtype=jnp.float32), edef.init(kv),
+            jnp.zeros(B, dtype=jnp.float32), jnp.asarray(keys))
+
+
+def carry_to_host(carry):
+    """Materialize a scan carry as a picklable numpy pytree (checkpoint
+    payload for the study journal / process-pool trial executors)."""
+    return jax.tree_util.tree_map(np.asarray, carry)
+
+
 def _build_run_fn(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
                   page_bytes, record_placement, select_mode="ref"):
+    """Compiled scan driver over ``n_epochs`` epochs (the SEGMENT length).
+
+    ``run(kv, reads_t, writes_t, const, carry, epoch_ids)`` advances the
+    carry through one segment and returns ``(final_carry, outs)``.  Epoch
+    indices travel as data (``epoch_ids``, int32 ``(n_epochs,)``), so one
+    compiled function per segment *length* serves any epoch offset —
+    resuming a checkpointed trial never recompiles.
+    """
     edef = _ENGINE_DEFS[engine_name](B, n, fast_cap, sampler, select_mode)
 
-    def run(kv, keys, reads_t, writes_t, const, est0):
+    def run(kv, reads_t, writes_t, const, carry, epoch_ids):
         step = _build_step(edef, const, page_bytes, scale, record_placement)
-        carry0 = (jnp.zeros((B, n), dtype=bool), jnp.zeros(n, dtype=bool),
-                  est0.astype(jnp.float32), edef.init(kv),
-                  jnp.zeros(B, dtype=jnp.float32), keys)
-        xs = (reads_t, writes_t, jnp.arange(n_epochs, dtype=jnp.int32))
-        _, outs = jax.lax.scan(lambda c, x: step(c, x, kv), carry0, xs)
-        return outs
+        xs = (reads_t, writes_t, epoch_ids)
+        return jax.lax.scan(lambda c, x: step(c, x, kv), carry, xs)
 
     return edef, run
 
@@ -1013,31 +1040,53 @@ def _get_compiled(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
         return hit
     prefix = key[:3]
     if any(k[:3] == prefix for k in _COMPILED):
-        log.warning(
-            "recompiling jax epoch loop for %s (n_pages=%d, sampler=%s): "
-            "batch/epoch shape or selection changed to B=%d, E=%d, "
-            "fast_cap=%d, select=%s",
-            engine_name, n, sampler, B, n_epochs, fast_cap, select_mode)
+        if any(k[:4] == key[:4] and k[5:] == key[5:] for k in _COMPILED):
+            # only the segment LENGTH differs — routine for the tune
+            # service's partial-epoch (ASHA rung) evaluations, not churn
+            log.debug("compiling %d-epoch segment driver for %s "
+                      "(n_pages=%d, B=%d)", n_epochs, engine_name, n, B)
+        else:
+            log.warning(
+                "recompiling jax epoch loop for %s (n_pages=%d, sampler=%s): "
+                "batch/epoch shape or selection changed to B=%d, E=%d, "
+                "fast_cap=%d, select=%s",
+                engine_name, n, sampler, B, n_epochs, fast_cap, select_mode)
     if pmapped:
         # data-parallel over local XLA devices: each device runs the scan on
         # a B/ndev slice of the batch.  Per-row draws are keyed by global
-        # batch index (shipped in `keys`), so device placement never
-        # changes results.
+        # batch index (shipped in the carry's `keys`), so device placement
+        # never changes results.  The shared first-touch `allocated` vector
+        # is replicated (in_axes None) and comes back identical per device.
         Bl = B // ndev
         edef, run = _build_run_fn(engine_name, Bl, n, n_epochs, fast_cap,
                                   sampler, scale, page_bytes,
                                   record_placement, select_mode)
-        prun = jax.pmap(run, in_axes=(0, 0, None, None, None, 0))
+        prun = jax.pmap(run, in_axes=(0, None, None, None,
+                                      (0, None, 0, 0, 0, 0), None))
 
-        def sharded(kv, keys, reads_t, writes_t, const, est0):
-            kv_s = {k: v.reshape((ndev, Bl) + v.shape[1:])
-                    for k, v in kv.items()}
-            outs = prun(kv_s, keys.reshape(ndev, Bl), reads_t, writes_t,
-                        const, est0.reshape(ndev, Bl))
+        def sharded(kv, reads_t, writes_t, const, carry, epoch_ids):
+            def shard(a):
+                return jnp.reshape(a, (ndev, Bl) + a.shape[1:])
+
+            def unshard(a):
+                return jnp.reshape(a, (B,) + a.shape[2:])
+
+            kv_s = {k: shard(v) for k, v in kv.items()}
+            in_fast, allocated, est, eng, cum, keys = carry
+            carry_s = (shard(in_fast), allocated, shard(est),
+                       jax.tree_util.tree_map(shard, eng), shard(cum),
+                       shard(keys))
+            fin, outs = prun(kv_s, reads_t, writes_t, const, carry_s,
+                             epoch_ids)
+            f_in_fast, f_alloc, f_est, f_eng, f_cum, f_keys = fin
+            fin_carry = (unshard(f_in_fast), f_alloc[0], unshard(f_est),
+                         jax.tree_util.tree_map(unshard, f_eng),
+                         unshard(f_cum), unshard(f_keys))
             # (ndev, E, Bl, ...) -> (E, B, ...)
-            return tuple(
+            outs = tuple(
                 jnp.moveaxis(o, 0, 1).reshape((n_epochs, B) + o.shape[3:])
                 for o in outs)
+            return fin_carry, outs
 
         _COMPILED[key] = (edef, sharded)
         return edef, sharded
@@ -1060,7 +1109,11 @@ def run_epochs(workload, engine_name: str,
                seeds: Sequence[int], sampler: str, crn: bool = False,
                batch_offset: int = 0, record_placement: bool = False,
                python_loop: bool = False,
-               exact_select: bool = True) -> Dict[str, np.ndarray]:
+               exact_select: bool = True,
+               epoch_start: int = 0,
+               epoch_stop: "int | None" = None,
+               carry: Any = None,
+               return_carry: bool = False) -> Dict[str, np.ndarray]:
     """Run the compiled epoch loop; returns per-epoch result arrays.
 
     ``sim_configs`` must already be scale-adjusted (``scale_config``).
@@ -1069,10 +1122,21 @@ def run_epochs(workload, engine_name: str,
     against.  ``exact_select=True`` (default) plans migrations with the
     exact top-k selection kernel (Pallas or its pure-jnp ref, resolved by
     :func:`repro.kernels.ops.select_path`); ``False`` restores the
-    log-quantized ablation path.  Output dict: ``wall_ms``/
-    ``cum_migrations``/``hit_rate``/``sampling_ms``/``stall_ms`` as
-    ``(n_epochs, B)`` float arrays, plus ``in_fast`` ``(n_epochs, B, n)``
-    when ``record_placement``.
+    log-quantized ablation path.
+
+    **Segments (checkpoint/restore).**  ``epoch_start``/``epoch_stop``
+    bound the evaluated epoch range ``[start, stop)`` (default: the whole
+    workload).  Starting past epoch 0 requires ``carry`` — the scan carry a
+    previous segment returned under ``return_carry=True`` (as ``"carry"``
+    in the output dict, numpy-ified and picklable).  Segmented execution is
+    bitwise identical to one unsegmented scan: draws are keyed by absolute
+    epoch ids shipped as data, so segment boundaries are invisible to the
+    numerics (pinned by the tune-service conformance tests).
+
+    Output dict: ``wall_ms``/``cum_migrations``/``hit_rate``/
+    ``sampling_ms``/``stall_ms`` as ``(n_epochs, B)`` float arrays (segment
+    epochs only), plus ``in_fast`` ``(n_epochs, B, n)`` when
+    ``record_placement`` and ``carry`` when ``return_carry``.
     """
     if not have_jax():  # pragma: no cover - env without jax
         raise RuntimeError("backend='jax' requires jax; install it or use "
@@ -1084,11 +1148,19 @@ def run_epochs(workload, engine_name: str,
             f"backend='jax' supports up to {MAX_PAGES} pages "
             f"(workload has {n}); use the numpy backend for larger traces")
     E = workload.n_epochs
-    trace = [workload.epoch_access(e) for e in range(E)]
+    start = int(epoch_start)
+    stop = E if epoch_stop is None else min(int(epoch_stop), E)
+    if not 0 <= start < stop:
+        raise ValueError(f"empty epoch segment [{start}, {stop}) "
+                         f"(workload has {E} epochs)")
+    if start > 0 and carry is None:
+        raise ValueError("epoch_start > 0 requires the carry returned by "
+                         "the previous segment (return_carry=True)")
+    seg = stop - start
+    trace = [workload.epoch_access(e) for e in range(start, stop)]
     reads_t = np.stack([r for r, _ in trace]).astype(np.float32)
     writes_t = np.stack([w for _, w in trace]).astype(np.float32)
-    keys = base_keys(seeds, batch_offset, crn)
-    est0 = np.full(B, workload.epoch_ms, dtype=np.float32)
+    epoch_ids = np.arange(start, stop, dtype=np.int32)
     const = {k: np.float32(v) for k, v in const.items()}
     scale = workload.scale
     if exact_select:
@@ -1098,34 +1170,45 @@ def run_epochs(workload, engine_name: str,
         select_mode = "quantized"
 
     if python_loop:
-        edef, _ = _build_run_fn(engine_name, B, n, E, fast_cap, sampler,
+        edef, _ = _build_run_fn(engine_name, B, n, seg, fast_cap, sampler,
                                 scale, page_bytes, record_placement,
                                 select_mode)
         kv = edef.knobs(sim_configs)
         step = _build_step(edef, const, page_bytes, scale, record_placement)
-        carry = (jnp.zeros((B, n), dtype=bool), jnp.zeros(n, dtype=bool),
-                 jnp.asarray(est0), edef.init(kv),
-                 jnp.zeros(B, dtype=jnp.float32), jnp.asarray(keys))
+        if carry is None:
+            keys = base_keys(seeds, batch_offset, crn)
+            est0 = np.full(B, workload.epoch_ms, dtype=np.float32)
+            carry = init_carry(edef, kv, keys, est0)
+        else:
+            carry = jax.tree_util.tree_map(jnp.asarray, carry)
         outs = []
-        for e in range(E):
-            carry, out = step(carry, (jnp.asarray(reads_t[e]),
-                                      jnp.asarray(writes_t[e]),
-                                      jnp.int32(e)), kv)
-            outs.append(out)
+        for i, e in enumerate(epoch_ids):
+            carry, o = step(carry, (jnp.asarray(reads_t[i]),
+                                    jnp.asarray(writes_t[i]),
+                                    jnp.int32(int(e))), kv)
+            outs.append(o)
         stacked = tuple(jnp.stack([o[i] for o in outs])
                         for i in range(len(outs[0])))
     else:
-        edef, run = _get_compiled(engine_name, B, n, E, fast_cap, sampler,
+        edef, run = _get_compiled(engine_name, B, n, seg, fast_cap, sampler,
                                   scale, page_bytes, record_placement,
                                   select_mode)
         kv = edef.knobs(sim_configs)
-        stacked = run(kv, keys, reads_t, writes_t, const, est0)
+        if carry is None:
+            keys = base_keys(seeds, batch_offset, crn)
+            est0 = np.full(B, workload.epoch_ms, dtype=np.float32)
+            carry = init_carry(edef, kv, keys, est0)
+        else:
+            carry = jax.tree_util.tree_map(jnp.asarray, carry)
+        carry, stacked = run(kv, reads_t, writes_t, const, carry, epoch_ids)
 
     names = ["wall_ms", "cum_migrations", "hit_rate", "sampling_ms",
              "stall_ms"]
     if record_placement:
         names.append("in_fast")
     out = {name: np.asarray(arr) for name, arr in zip(names, stacked)}
+    if return_carry:
+        out["carry"] = carry_to_host(carry)
     # hand the materialized trace back so heatmap binning in the caller
     # does not regenerate it (procedural workloads pay O(n) per epoch)
     out["trace_reads"] = reads_t

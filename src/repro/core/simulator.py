@@ -395,7 +395,8 @@ def _run_batch_local(workload: Workload, engine_name: str,
                      heat_bins: int, fast_capacity_pages: Optional[int],
                      backend: str, crn: bool = False,
                      batch_offset: int = 0,
-                     exact_select: bool = True) -> List[SimResult]:
+                     exact_select: bool = True,
+                     epoch_stop: Optional[int] = None) -> List[SimResult]:
     if backend == "jax":
         if engine_jax.supports(engine_name, sampler, workload.n_pages):
             # the compiled fast path: engines + samplers + cost model fused
@@ -427,7 +428,8 @@ def _run_batch_local(workload: Workload, engine_name: str,
     page_bytes = tier.page_bytes
     const = _epoch_consts(workload, engine_name, machine, page_bytes)
 
-    n_epochs = workload.n_epochs
+    n_epochs = workload.n_epochs if epoch_stop is None \
+        else min(int(epoch_stop), workload.n_epochs)
     wall = np.zeros((n_epochs, B))
     cum_mig = np.zeros((n_epochs, B))
     hit_rate = np.zeros((n_epochs, B))
@@ -761,6 +763,84 @@ def run_simulation_batch(workload: Workload, engine_name: str,
         [(workload, engine_name, configs)], machine, fast_slow_ratio,
         [seeds], sampler, record_heatmap, heat_bins, fast_capacity_pages,
         backend, crn, workers, exact_select)[0]
+
+
+def run_simulation_segment(workload: Workload, engine_name: str,
+                           configs: Sequence[Mapping[str, Any]],
+                           machine: Machine | str = PMEM_LARGE,
+                           fast_slow_ratio: float = 8.0,
+                           seeds=0,
+                           sampler: str = "sparse",
+                           fast_capacity_pages: Optional[int] = None,
+                           backend: str = "numpy",
+                           crn: bool = False,
+                           batch_offset: int = 0,
+                           exact_select: bool = True,
+                           epoch_start: int = 0,
+                           epoch_stop: Optional[int] = None,
+                           carry: Any = None,
+                           return_carry: bool = False
+                           ) -> Dict[str, Any]:
+    """Partial-epoch evaluation — the tune service's checkpoint/restore hook.
+
+    Evaluates epochs ``[epoch_start, epoch_stop)`` of the workload (defaults
+    to the full range) and returns ``{"wall_ms": (seg, B) float64 array,
+    "carry": <scan-carry pytree or None>}``.  Per-epoch walls are bitwise
+    identical to the corresponding rows of a full :func:`run_simulation_batch`
+    pass — segmentation is invisible to the numerics.
+
+    ``backend="jax"`` (compiled-path combinations) supports true mid-run
+    checkpointing: pass ``return_carry=True`` to get the scan carry back
+    (numpy-ified, picklable) and feed it to the next segment via ``carry`` +
+    ``epoch_start``.  The numpy reference path has sequential RNG state that
+    cannot be checkpointed, so it only supports prefixes
+    (``epoch_start=0``): a partial-budget re-evaluation re-runs from epoch 0
+    to ``epoch_stop`` — exact (the prefix of a full run is bit-identical),
+    just without the resume shortcut.
+    """
+    configs = [dict(c) for c in configs]
+    B = len(configs)
+    machine = _as_machine(machine)
+    if np.ndim(seeds) == 0:
+        seeds = [int(seeds)] * B
+    seeds = [int(s) for s in seeds]
+    if len(seeds) != B:
+        raise ValueError("seeds must be an int or one seed per config")
+    if crn:
+        seeds = [seeds[0]] * len(seeds)
+    use_jax = backend == "jax" and engine_jax.supports(
+        engine_name, sampler, workload.n_pages)
+    if backend == "jax" and not use_jax:
+        _warn_jax_fallback(engine_name, sampler, workload.n_pages)
+    if use_jax:
+        fast_cap = _fast_capacity(workload, fast_slow_ratio,
+                                  fast_capacity_pages)
+        sim_cfgs = [scale_config(engine_name, c, workload.scale)
+                    for c in configs]
+        const = _epoch_consts(workload, engine_name, machine, PAGE_BYTES)
+        out = engine_jax.run_epochs(
+            workload, engine_name, sim_cfgs, const, fast_cap, PAGE_BYTES,
+            seeds, sampler, crn=crn, batch_offset=batch_offset,
+            exact_select=exact_select, epoch_start=epoch_start,
+            epoch_stop=epoch_stop, carry=carry, return_carry=return_carry)
+        return {"wall_ms": np.asarray(out["wall_ms"], dtype=np.float64),
+                "carry": out.get("carry")}
+    if crn:
+        raise ValueError(
+            "crn=True requires the compiled jax path; see run_simulation_batch")
+    if epoch_start != 0 or carry is not None or return_carry:
+        raise ValueError(
+            "the numpy epoch loop has sequential RNG state and cannot be "
+            "checkpointed mid-run: only prefix segments (epoch_start=0, no "
+            "carry) are supported; use backend='jax' for resumable trials")
+    results = _run_batch_local(
+        workload, engine_name, configs, machine, fast_slow_ratio, seeds,
+        sampler, False, 128, fast_capacity_pages, backend,
+        batch_offset=batch_offset, exact_select=exact_select,
+        epoch_stop=epoch_stop)
+    wall = np.stack([np.asarray(r.epoch_wall_ms, dtype=np.float64)
+                     for r in results], axis=1)
+    return {"wall_ms": wall, "carry": None}
 
 
 def run_simulation(workload: Workload, engine_name: str,

@@ -150,7 +150,12 @@ class Study:
              surrogate: Optional[str] = None,
              acquisition: Optional[str] = None,
              objective: Optional[Any] = None,
-             objective_batch: Optional[Any] = None) -> TuningResult:
+             objective_batch: Optional[Any] = None,
+             executor: str = "sync", slots: int = 1,
+             scheduler: Optional[str] = None,
+             journal: Optional[str] = None, resume: bool = False,
+             pool: str = "thread", eta: int = 4,
+             window: Optional[int] = None) -> TuningResult:
         """SMAC-BO tuning of the spec's engine knobs (§3.1).
 
         ``seed`` seeds the optimizer; the simulation seed stays
@@ -180,7 +185,75 @@ class Study:
         (engine name resolves the knob space, ``self.key`` the scenario).
         ``objective_batch`` (``[config] -> [float]``) is its vectorized
         counterpart, used when ``batch_size > 1``.
+
+        **Async tuning & resume** (``executor="async"``). The study is
+        handed to :class:`~repro.core.tune_service.TuneService`: ``slots``
+        evaluation slots stay saturated with trials (no per-round
+        barrier — a new trial is asked the moment the ask-ahead window
+        has room), results are committed in canonical creation order, and
+        every decision (ask, rung, tell) happens at commit time, so the
+        whole study is a deterministic function of its parameters no
+        matter how completions interleave.  At ``slots=1,
+        scheduler=None`` this reproduces the synchronous path's incumbent
+        bit-identically.  Knobs:
+
+        * ``slots`` — evaluation-slot count; ``pool`` picks the slot
+          backend (``"thread"`` default, ``"process"`` for the
+          simulator's persistent worker pool).
+        * ``window`` — ask-ahead depth (default ``slots``): a window
+          larger than ``slots`` chunks several asks into one
+          ``ask_batch`` call (one surrogate fit per chunk, amortized
+          like the sync ``batch_size=q`` path) while the slots stay
+          saturated.
+        * ``scheduler="asha"`` — successive-halving early stopping over
+          ¼/½/full-epoch rungs (``eta`` controls the promotion
+          fraction).  Trials the scheduler stops early are told their
+          value extrapolated to full budget; on the compiled backend
+          promoted trials resume mid-run from the epoch-loop checkpoint
+          (the scan carry) instead of re-simulating.  Incompatible with
+          custom ``objective=`` (partial-epoch values come from the
+          simulator).
+        * ``journal=<path>`` — JSON-lines study journal recording every
+          ask/eval/rung/tell/fail decision with the replayable spec
+          (schema: :mod:`repro.core.tune_service.journal`;
+          ``tools/journal_schema.py`` validates it standalone).  With
+          ``resume=True`` a killed study re-runs the control loop using
+          the journal as an evaluation cache and continues exactly where
+          it died — the resumed journal is byte-identical to an
+          uninterrupted run's.
+        * failures in the objective or shard workers mark that trial
+          ``FAILED`` (config + traceback journaled), skip its tell, and
+          keep the executor saturated — one bad config cannot kill a
+          study.
+
+        The async path returns an
+        :class:`~repro.core.tune_service.AsyncTuningResult` (a
+        ``TuningResult`` plus the trial table, slot-utilization and
+        ASHA-savings receipts); ``benchmarks/study_async.py`` turns those
+        into the BENCH_study.json wall-clock receipts.
         """
+        if executor == "async":
+            from .tune_service import TuneService
+            if batch_size != 1 or objective_batch is not None:
+                raise ValueError(
+                    "executor='async' replaces per-round batching with "
+                    "slot saturation; use slots=N instead of batch_size")
+            service = TuneService(
+                self, budget=budget, slots=slots, scheduler=scheduler,
+                seed=seed, optimizer=optimizer, n_init=n_init,
+                random_prob=random_prob, space=space, surrogate=surrogate,
+                acquisition=acquisition, objective=objective,
+                journal=journal, resume=resume, pool=pool, eta=eta,
+                window=window, verbose=verbose)
+            return service.run()
+        if executor != "sync":
+            raise ValueError(f"unknown executor {executor!r}; expected "
+                             f"'sync' or 'async'")
+        if scheduler is not None or slots != 1 or journal is not None \
+                or resume or window is not None:
+            raise ValueError(
+                "slots/scheduler/journal/resume/window require "
+                "executor='async'")
         if objective is None:
             def objective(config: Config) -> float:
                 return self.run(configs=[config])[0].total_s

@@ -1,0 +1,33 @@
+"""Asynchronous trial-executor tuning service (deterministic, resumable).
+
+The package behind ``Study.tune(executor="async", slots=N,
+scheduler="asha"|None, journal=..., resume=...)``:
+
+* :mod:`.trial` — the PENDING/RUNNING/PAUSED/TERMINATED/FAILED trial state
+  machine, carrying the frozen spec, RNG counters and the mid-run epoch
+  loop checkpoint (``lax.scan`` carry);
+* :mod:`.executor` — N saturated evaluation slots (thread/process) with
+  results committed in canonical unit-creation order;
+* :mod:`.asha` — asynchronous successive halving over ¼/½/full epoch
+  rungs;
+* :mod:`.journal` — the JSON-lines study journal; a killed study resumes
+  by replaying the deterministic control loop against the journal as an
+  evaluation cache, byte-identically;
+* :mod:`.service` — the control loop tying the above together.
+"""
+
+from .asha import ASHAScheduler, PROMOTE, RUNG_FRACTIONS, STOP
+from .executor import TrialExecutor
+from .journal import StudyJournal, VERSION, read_events
+from .service import AsyncTuningResult, TuneService
+from .trial import (FAILED, PAUSED, PENDING, RUNNING, TERMINATED,
+                    TRANSITIONS, Trial)
+
+__all__ = [
+    "ASHAScheduler", "PROMOTE", "RUNG_FRACTIONS", "STOP",
+    "TrialExecutor",
+    "StudyJournal", "VERSION", "read_events",
+    "AsyncTuningResult", "TuneService",
+    "FAILED", "PAUSED", "PENDING", "RUNNING", "TERMINATED",
+    "TRANSITIONS", "Trial",
+]

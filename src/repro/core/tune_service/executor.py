@@ -1,0 +1,119 @@
+"""TrialExecutor: N saturated evaluation slots + canonical commit order.
+
+The executor generalizes the PR 3 cross-cell sweep scheduler to tuning:
+work units (trial evaluation segments) are enqueued in creation order and
+run on whichever of the N slots frees first — slots never idle while work
+is queued, and nothing ever waits on a per-round barrier.  What makes the
+asynchrony safe is the COMMIT protocol: results are handed back strictly
+in unit-creation order (:meth:`pop_next` blocks on the canonical-next
+unit while later finishers buffer), so every decision the service makes —
+asks, ASHA promotions, CRN-group tells — sees a deterministic state no
+matter how wall-clock completion interleaved.  Combined with the
+simulator's counter-based draws (placement-invariant numbers), the entire
+study is a pure function of its parameters; the executor only changes how
+fast it runs.
+
+Two slot backends:
+
+* ``"thread"`` (default) — a thread pool; the compiled jax epoch loop
+  releases the GIL inside XLA executions, so segments overlap on
+  multi-core hosts, and unpicklable custom ``objective=`` callables work.
+* ``"process"`` — the simulator's persistent process pool
+  (:func:`repro.core.simulator._get_pool`), sharing its spawn-safety and
+  XLA warm-start behaviour; payload functions must be module-level
+  picklables (the service's default simulator objective is).
+
+Failures never kill a slot: unit callables are wrapped, exceptions come
+back as ``{"error": <traceback>}`` results, and the service records a
+FAILED trial and keeps the window full (the fault-injection satellite).
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+POOLS = ("thread", "process")
+
+
+def _timed_safe(fn: Callable[..., Dict[str, Any]], *args
+                ) -> Dict[str, Any]:
+    """Run one unit: exceptions -> {"error": traceback}; always stamps the
+    slot-occupancy wall clock (``slot_s``) for the utilization receipt.
+    Module-level so process pools can pickle it."""
+    t0 = time.perf_counter()
+    try:
+        out = fn(*args)
+        if not isinstance(out, dict):
+            out = {"value": out}
+    except BaseException as e:  # noqa: BLE001 - FAILED-trial contract
+        out = {"error": "".join(traceback.format_exception(
+            type(e), e, e.__traceback__))}
+    out["slot_s"] = time.perf_counter() - t0
+    return out
+
+
+class TrialExecutor:
+    """``slots`` evaluation slots over a thread/process pool, with results
+    committed in unit-creation order."""
+
+    def __init__(self, slots: int, pool: str = "thread"):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if pool not in POOLS:
+            raise ValueError(f"unknown pool {pool!r}; expected one of "
+                             f"{POOLS}")
+        self.slots = int(slots)
+        self.pool_kind = pool
+        if pool == "process":
+            from ..simulator import _get_pool
+            self._pool = _get_pool(self.slots)
+            self._owns_pool = False
+        else:
+            import concurrent.futures
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=self.slots,
+                thread_name_prefix="repro-tune-slot")
+            self._owns_pool = True
+        self._futures: Dict[int, Any] = {}
+        self._next_seq = 0
+        self._next_commit = 0
+        self.busy_s = 0.0  # summed slot occupancy (utilization receipt)
+
+    # -- submission --------------------------------------------------------
+    def submit(self, fn: Callable[..., Dict[str, Any]], *args) -> int:
+        """Enqueue one unit (FIFO; the pool keeps <= slots running).
+        Returns the unit's canonical sequence number."""
+        seq = self._next_seq
+        self._next_seq += 1
+        self._futures[seq] = self._pool.submit(_timed_safe, fn, *args)
+        return seq
+
+    def submit_ready(self, result: Dict[str, Any]) -> int:
+        """Enqueue a pre-resolved unit (journal-replay cache hit): it holds
+        a commit slot in canonical order but occupies no evaluation slot."""
+        seq = self._next_seq
+        self._next_seq += 1
+        self._futures[seq] = dict(result)  # sentinel: plain dict == ready
+        return seq
+
+    # -- canonical-order commits ------------------------------------------
+    @property
+    def outstanding(self) -> int:
+        """Units created but not yet committed (the ask-ahead window)."""
+        return self._next_seq - self._next_commit
+
+    def pop_next(self) -> Tuple[int, Dict[str, Any]]:
+        """Block for the canonical-next unit's result (later finishers
+        buffer inside their futures until their turn)."""
+        seq = self._next_commit
+        fut = self._futures.pop(seq)
+        result = fut if isinstance(fut, dict) else fut.result()
+        self._next_commit += 1
+        self.busy_s += float(result.get("slot_s", 0.0))
+        return seq, result
+
+    def close(self) -> None:
+        if self._owns_pool:
+            self._pool.shutdown(wait=True)

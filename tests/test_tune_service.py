@@ -1,0 +1,436 @@
+"""Asynchronous tuning service: sync equivalence, determinism, resume.
+
+The acceptance bars of the tune-service PR:
+
+* ``Study.tune(executor="async", slots=1, scheduler=None)`` reproduces the
+  synchronous path's suggestions and incumbent **bit-identically** for all
+  five engines;
+* the study is placement-invariant — wall-clock completion order (slot
+  delays) cannot change any decision or journal byte;
+* a study killed mid-rung and resumed from its journal produces a journal,
+  trial table and incumbent byte/bit-identical to an uninterrupted twin;
+* a failure in the objective yields a FAILED trial (traceback journaled),
+  skips its tell, and does not derail the study.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineSpec, ExperimentSpec, SimOptions, Study,
+                        WorkloadSpec)
+from repro.core.knobs import Knob, KnobSpace, get_space
+from repro.core.tune_service import (ASHAScheduler, AsyncTuningResult,
+                                     PROMOTE, STOP, StudyJournal, Trial,
+                                     TrialExecutor, read_events)
+from repro.core.tune_service.trial import (FAILED, PAUSED, PENDING, RUNNING,
+                                           TERMINATED)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+SCALE = 0.02
+ALL_ENGINES = ["hemem", "hmsdk", "memtis", "static", "oracle"]
+
+#: static/oracle have no registered knob space; engines read config keys
+#: with defaults, so a real-but-inert knob gives the optimizer a domain
+TINY_SPACE = KnobSpace([
+    Knob("max_migration_rate", 10, 2, 20, is_int=True),
+])
+
+
+def _spec(engine="hemem", workload="gups", **opts):
+    return ExperimentSpec(engine=engine,
+                          workload=WorkloadSpec(workload, scale=SCALE),
+                          options=SimOptions(**opts))
+
+
+def _space_for(engine):
+    try:
+        return get_space(engine)
+    except KeyError:
+        return TINY_SPACE
+
+
+def _histories_equal(a, b):
+    return [(o.config, o.value) for o in a.history] == \
+        [(o.config, o.value) for o in b.history]
+
+
+# ---------------------------------------------------------------------------
+# slots=1 / scheduler=None  ==  the synchronous path, bit-identically
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_async_slots1_matches_sync(engine):
+    space = _space_for(engine)
+    kw = dict(budget=4, seed=9, n_init=3, space=space)
+    r_sync = Study(_spec(engine, backend="numpy")).tune(**kw)
+    r_async = Study(_spec(engine, backend="numpy")).tune(
+        executor="async", slots=1, scheduler=None, **kw)
+    assert isinstance(r_async, AsyncTuningResult)
+    assert r_async.default_value == r_sync.default_value
+    assert _histories_equal(r_sync, r_async)
+    assert r_async.best_value == r_sync.best_value
+    assert r_async.best.config == r_sync.best.config
+
+
+def test_async_slots1_matches_sync_jax_crn():
+    # the out-of-order tell_batch(crn=True) regression pin: the async path
+    # must feed the optimizer the same (config, value) stream as sync even
+    # with CRN evaluation
+    kw = dict(budget=4, seed=9, n_init=3)
+    r_sync = Study(_spec(backend="jax", crn=True)).tune(**kw)
+    r_async = Study(_spec(backend="jax", crn=True)).tune(
+        executor="async", **kw)
+    assert _histories_equal(r_sync, r_async)
+    assert r_async.best.config == r_sync.best.config
+    assert r_async.best_value == r_sync.best_value
+
+
+def test_sync_path_rejects_async_knobs():
+    with pytest.raises(ValueError, match="executor='async'"):
+        Study(_spec(backend="numpy")).tune(budget=2, slots=4)
+    with pytest.raises(ValueError, match="scheduler='asha'"):
+        Study(_spec(backend="numpy")).tune(
+            budget=2, executor="async", scheduler="asha",
+            objective=lambda c: 0.0)
+    with pytest.raises(ValueError, match="unknown executor"):
+        Study(_spec(backend="numpy")).tune(budget=2, executor="ray")
+
+
+# ---------------------------------------------------------------------------
+# placement invariance: slot delays cannot change decisions
+# ---------------------------------------------------------------------------
+def test_async_placement_invariant_under_slot_delays(tmp_path):
+    # deterministic values, adversarially jittered completion times: the
+    # journals (every ask/eval/tell decision) must still be byte-identical
+    def make_objective(jitter_seed):
+        rng = np.random.default_rng(jitter_seed)
+
+        def obj(cfg):
+            time.sleep(float(rng.random()) * 0.01)
+            return float(cfg["sampling_period"])
+
+        return obj
+
+    journals = []
+    for run, jitter in enumerate([0, 1234]):
+        j = str(tmp_path / f"jit{run}.jsonl")
+        r = Study(_spec(backend="numpy")).tune(
+            budget=6, seed=9, n_init=3, executor="async", slots=3,
+            objective=make_objective(jitter), journal=j)
+        journals.append(open(j, "rb").read())
+        assert len(r.history) == 6
+    assert journals[0] == journals[1]
+
+
+# ---------------------------------------------------------------------------
+# trial state machine
+# ---------------------------------------------------------------------------
+def test_trial_state_machine():
+    t = Trial(index=0, config={}, encoded=np.zeros(1), spec={}, seed=0)
+    assert t.state == PENDING
+    with pytest.raises(ValueError, match="illegal trial transition"):
+        t.advance(PAUSED)
+    t.advance(RUNNING)
+    t.advance(PAUSED)
+    t.advance(RUNNING)
+    t.advance(TERMINATED)
+    assert t.terminal
+    with pytest.raises(ValueError):
+        t.advance(RUNNING)
+    with pytest.raises(ValueError, match="unknown trial state"):
+        Trial(index=1, config={}, encoded=np.zeros(1), spec={},
+              seed=0).advance("ZOMBIE")
+
+
+def test_trial_value_at_is_segment_invariant():
+    t = Trial(index=0, config={}, encoded=np.zeros(1), spec={}, seed=0)
+    wall = np.linspace(1.0, 60.0, 60)
+    t.epoch_wall_ms = [wall[:15], wall[15:30], wall[30:]]
+    u = Trial(index=1, config={}, encoded=np.zeros(1), spec={}, seed=0)
+    u.epoch_wall_ms = [wall]
+    for e in (15, 30, 60):
+        assert t.value_at(e) == u.value_at(e)
+    with pytest.raises(ValueError, match="evaluated epochs"):
+        t.value_at(61)
+
+
+# ---------------------------------------------------------------------------
+# ASHA scheduler
+# ---------------------------------------------------------------------------
+def test_asha_rung_budgets():
+    s = ASHAScheduler(60)
+    assert s.rung_epochs == (15, 30, 60)
+    assert ASHAScheduler(1).rung_epochs == (1,)   # degenerate rungs dedupe
+    assert ASHAScheduler(5).rung_epochs == (2, 3, 5)
+    with pytest.raises(ValueError):
+        ASHAScheduler(60, eta=1)
+
+
+def test_asha_promotion_rule():
+    s = ASHAScheduler(60, eta=4)
+    # first result at a rung is always the current best -> promotes
+    assert s.report(0, 0, 10.0) == PROMOTE
+    # worse results stop while the pool is small
+    assert s.report(0, 1, 20.0) == STOP
+    assert s.report(0, 2, 30.0) == STOP
+    # a new best promotes...
+    assert s.report(0, 3, 5.0) == PROMOTE
+    # ...and with 8 results there are two promotion slots
+    for i, v in enumerate([40.0, 50.0, 60.0], start=4):
+        assert s.report(0, i, v) == STOP
+    assert s.report(0, 7, 7.0) == PROMOTE
+    # final rung never decides
+    with pytest.raises(ValueError, match="final budget"):
+        s.report(s.n_rungs - 1, 0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+def test_executor_commits_in_creation_order():
+    ex = TrialExecutor(slots=4)
+    try:
+        delays = [0.03, 0.0, 0.02, 0.0]
+
+        def unit(i):
+            time.sleep(delays[i])
+            return {"value": i}
+
+        for i in range(4):
+            ex.submit(unit, i)
+        got = [ex.pop_next() for _ in range(4)]
+        assert [seq for seq, _ in got] == [0, 1, 2, 3]
+        assert [r["value"] for _, r in got] == [0, 1, 2, 3]
+        assert ex.outstanding == 0
+        assert ex.busy_s > 0.0
+    finally:
+        ex.close()
+
+
+def test_executor_wraps_failures():
+    ex = TrialExecutor(slots=1)
+    try:
+        def boom():
+            raise RuntimeError("kaput")
+
+        ex.submit(boom)
+        _, result = ex.pop_next()
+        assert "kaput" in result["error"] and "slot_s" in result
+    finally:
+        ex.close()
+    with pytest.raises(ValueError, match="slots"):
+        TrialExecutor(slots=0)
+    with pytest.raises(ValueError, match="pool"):
+        TrialExecutor(slots=1, pool="fiber")
+
+
+# ---------------------------------------------------------------------------
+# journal
+# ---------------------------------------------------------------------------
+def test_journal_tolerates_torn_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with StudyJournal(path) as j:
+        j.append({"event": "study", "version": 1})
+        j.append({"event": "ask", "trial": 0, "config": {"a": 1}})
+        j.append({"event": "eval", "trial": 0, "epochs": 4, "value": 2.5})
+    raw = open(path, "rb").read()
+    open(path, "wb").write(raw[:-9])  # SIGKILL lands mid-append
+    assert [e["event"] for e in read_events(path)] == ["study", "ask"]
+    # resume truncates the torn bytes so appends continue cleanly
+    with StudyJournal(path, resume=True) as j:
+        assert j.append({"event": "study", "version": 1})["version"] == 1
+        assert j.append({"event": "ask", "trial": 0,
+                         "config": {"a": 1}})["config"] == {"a": 1}
+        assert not j.replaying
+        j.append({"event": "eval", "trial": 0, "epochs": 4, "value": 2.5})
+    assert open(path, "rb").read() == raw
+
+
+def test_journal_replay_divergence_raises(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with StudyJournal(path) as j:
+        j.append({"event": "study", "budget": 8})
+    with StudyJournal(path, resume=True) as j:
+        with pytest.raises(ValueError, match="diverged"):
+            j.append({"event": "study", "budget": 16})
+    with StudyJournal(path, resume=True) as j:
+        with pytest.raises(ValueError, match="diverged"):
+            j.append({"event": "ask", "trial": 0})
+    with pytest.raises(FileNotFoundError):
+        StudyJournal(str(tmp_path / "nope.jsonl"), resume=True)
+
+
+def test_resume_requires_journal():
+    with pytest.raises(ValueError, match="journal"):
+        Study(_spec(backend="numpy")).tune(
+            budget=2, executor="async", resume=True)
+
+
+# ---------------------------------------------------------------------------
+# fault injection (satellite: robustness)
+# ---------------------------------------------------------------------------
+def test_failed_trial_is_journaled_and_skipped(tmp_path):
+    calls = {"n": 0}
+
+    def obj(cfg):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("injected fault")
+        return float(cfg["sampling_period"])
+
+    j = str(tmp_path / "fault.jsonl")
+    r = Study(_spec(backend="numpy")).tune(
+        budget=6, seed=9, n_init=3, executor="async", slots=2,
+        objective=obj, journal=j)
+    states = [t["state"] for t in r.trials]
+    assert states.count(FAILED) == 1 and r.n_failed == 1
+    assert states.count(TERMINATED) == 5
+    # the failed trial's tell was skipped; everything else was told
+    assert len(r.history) == 5
+    failed = next(t for t in r.trials if t["state"] == FAILED)
+    assert "injected fault" in failed["error"]
+    fails = [e for e in read_events(j) if e["event"] == "fail"]
+    assert len(fails) == 1 and fails[0]["trial"] == failed["index"]
+    assert "injected fault" in fails[0]["error"]
+    assert not any(e["event"] == "tell" and e["trial"] == failed["index"]
+                   for e in read_events(j))
+
+
+def test_default_config_failure_is_fatal():
+    def obj(cfg):
+        raise RuntimeError("doomed from the start")
+
+    with pytest.raises(RuntimeError, match="default-config baseline"):
+        Study(_spec(backend="numpy")).tune(
+            budget=2, executor="async", objective=obj)
+
+
+# ---------------------------------------------------------------------------
+# ASHA end-to-end + journal twins (jax checkpoint path)
+# ---------------------------------------------------------------------------
+def test_asha_async_jax_journal_twins(tmp_path):
+    kw = dict(budget=8, seed=9, n_init=3, executor="async", slots=3,
+              scheduler="asha")
+    j1, j2 = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    r1 = Study(_spec(backend="jax")).tune(journal=j1, **kw)
+    r2 = Study(_spec(backend="jax")).tune(journal=j2, **kw)
+    assert open(j1, "rb").read() == open(j2, "rb").read()
+    assert r1.trials == r2.trials
+    # rung budgets are respected and early stops actually saved epochs
+    rungs = (15, 30, 60)
+    for t in r1.trials:
+        assert t["epochs_run"] in rungs
+    assert r1.n_stopped_early > 0
+    assert 0.0 < r1.asha_epochs_saved_frac < 1.0
+    # the incumbent is always a fully-evaluated trial
+    assert r1.best_row["epochs_run"] == 60
+    # extrapolated tells: early-stopped trials enter the history scaled to
+    # full budget
+    stopped = [t for t in r1.trials if t["epochs_run"] < 60]
+    for t in stopped:
+        assert t["told_value"] == pytest.approx(
+            t["value"] * 60 / t["epochs_run"])
+
+
+def test_asha_resume_from_torn_journal_is_bit_identical(tmp_path):
+    kw = dict(budget=8, seed=9, n_init=3, executor="async", slots=3,
+              scheduler="asha")
+    j1, j2 = str(tmp_path / "full.jsonl"), str(tmp_path / "torn.jsonl")
+    r1 = Study(_spec(backend="jax")).tune(journal=j1, **kw)
+    raw = open(j1, "rb").read()
+    lines = raw.split(b"\n")
+    torn = b"\n".join(lines[:-7]) + b"\n" + lines[-7][:10]
+    open(j2, "wb").write(torn)
+    r2 = Study(_spec(backend="jax")).tune(journal=j2, resume=True, **kw)
+    assert open(j2, "rb").read() == raw
+    assert r2.trials == r1.trials
+    assert r2.best_value == r1.best_value
+    assert r2.best.config == r1.best.config
+    assert r2.resumed
+
+
+def test_resume_complete_journal_runs_no_evaluations(tmp_path, monkeypatch):
+    import repro.core.tune_service.service as svc
+    kw = dict(budget=5, seed=9, n_init=3, executor="async", slots=2)
+    j = str(tmp_path / "done.jsonl")
+    r1 = Study(_spec(backend="numpy")).tune(journal=j, **kw)
+    raw = open(j, "rb").read()
+
+    def no_eval(payload):
+        raise AssertionError("complete journal must not re-evaluate")
+
+    monkeypatch.setattr(svc, "_eval_segment", no_eval)
+    r2 = Study(_spec(backend="numpy")).tune(journal=j, resume=True, **kw)
+    assert open(j, "rb").read() == raw
+    assert r2.trials == r1.trials and r2.best_value == r1.best_value
+
+
+def test_resume_rejects_changed_parameters(tmp_path):
+    j = str(tmp_path / "j.jsonl")
+    Study(_spec(backend="numpy")).tune(
+        budget=3, seed=9, n_init=2, executor="async", journal=j)
+    with pytest.raises(ValueError, match="diverged"):
+        Study(_spec(backend="numpy")).tune(
+            budget=5, seed=9, n_init=2, executor="async", journal=j,
+            resume=True)
+
+
+# ---------------------------------------------------------------------------
+# kill/resume (satellite: SIGKILL a live study mid-rung)
+# ---------------------------------------------------------------------------
+_KILL_SCRIPT = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
+spec = ExperimentSpec(engine="hemem",
+                      workload=WorkloadSpec("gups", scale={scale!r}),
+                      options=SimOptions(backend="numpy"))
+print("ready", flush=True)
+Study(spec).tune(budget=64, seed=9, n_init=5, executor="async", slots=4,
+                 scheduler="asha", journal={journal!r})
+"""
+
+
+def test_sigkill_then_resume_matches_uninterrupted_twin(tmp_path):
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    kw = dict(budget=64, seed=9, n_init=5, executor="async", slots=4,
+              scheduler="asha")
+    j_twin = str(tmp_path / "twin.jsonl")
+    r_twin = Study(_spec(backend="numpy")).tune(journal=j_twin, **kw)
+
+    j_kill = str(tmp_path / "killed.jsonl")
+    proc = subprocess.Popen(
+        [sys.executable, "-c",
+         _KILL_SCRIPT.format(src=os.path.abspath(src), scale=SCALE,
+                             journal=j_kill)],
+        stdout=subprocess.PIPE)
+    try:
+        # SIGKILL once the study is demonstrably mid-rung (journal growing)
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            if os.path.exists(j_kill) and \
+                    len(open(j_kill, "rb").read().splitlines()) >= 20:
+                break
+            time.sleep(0.01)
+        else:
+            pytest.fail("killed study never reached mid-rung")
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        proc.wait()
+    killed_events = read_events(j_kill)
+    assert 0 < len(killed_events) < len(read_events(j_twin))
+
+    r_res = Study(_spec(backend="numpy")).tune(journal=j_kill, resume=True,
+                                               **kw)
+    assert open(j_kill, "rb").read() == open(j_twin, "rb").read()
+    assert r_res.trials == r_twin.trials
+    assert r_res.best_value == r_twin.best_value
+    assert r_res.best.config == r_twin.best.config
+    assert _histories_equal(r_twin, r_res)

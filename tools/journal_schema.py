@@ -1,0 +1,169 @@
+"""Validate a tune-service study journal (JSON-lines) standalone.
+
+Checks the structural invariants the deterministic control loop guarantees
+(see ``repro.core.tune_service.journal`` for the event vocabulary):
+
+* line 1 is a ``study`` header with a known schema ``version``;
+* every event carries its required fields with the right types;
+* ``ask`` precedes any ``eval``/``fail``/``rung``/``tell`` for a trial,
+  and trial indices are asked densely in order (0, 1, 2, ...);
+* per trial, committed ``eval`` epochs are strictly increasing and every
+  later segment follows a ``promote`` decision;
+* a trial journals at most one terminal path (``fail`` excludes ``tell``);
+* at most one ``default`` and one ``done`` event, in their legal spots.
+
+Usage::
+
+    python tools/journal_schema.py STUDY.jsonl [...]
+
+Exit status 0 when every journal validates; 1 otherwise (problems are
+listed per file).  A truncated final line (the study was SIGKILLed
+mid-append) is tolerated, matching resume semantics.
+"""
+
+import json
+import sys
+
+#: required fields (name -> type) per event type
+EVENT_FIELDS = {
+    "study": {"version": int, "spec": dict, "budget": int, "slots": int,
+              "rung_epochs": list, "optimizer": str, "opt_seed": int},
+    "default": {"value": float},
+    "ask": {"trial": int, "group": int, "config": dict},
+    "eval": {"trial": int, "epochs": int, "value": float},
+    "rung": {"trial": int, "rung": int, "decision": str},
+    "fail": {"trial": int, "epochs": int, "error": str},
+    "tell": {"trial": int, "group": int, "value": float},
+    "done": {"best_trial": int, "best_value": float},
+}
+KNOWN_VERSIONS = (1,)
+
+
+def validate_events(events):
+    """Validate parsed journal events; returns a list of problem strings
+    (empty == valid)."""
+    problems = []
+
+    def bad(i, msg):
+        problems.append(f"event {i}: {msg}")
+
+    if not events:
+        return ["journal is empty"]
+    asked = set()
+    epochs_seen = {}        # trial -> last committed eval epochs
+    promoted = {}           # trial -> pending promote decisions
+    terminal = {}           # trial -> "fail" | "tell"
+    n_default = n_done = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "event" not in ev:
+            bad(i, "not an object with an 'event' field")
+            continue
+        kind = ev["event"]
+        fields = EVENT_FIELDS.get(kind)
+        if fields is None:
+            bad(i, f"unknown event type {kind!r}")
+            continue
+        for name, typ in fields.items():
+            if name not in ev:
+                bad(i, f"{kind!r} missing required field {name!r}")
+            elif typ is float:
+                if not isinstance(ev[name], (int, float)) \
+                        or isinstance(ev[name], bool):
+                    bad(i, f"{kind}.{name} is not a number")
+            elif not isinstance(ev[name], typ) or isinstance(ev[name], bool):
+                bad(i, f"{kind}.{name} is not {typ.__name__}")
+        if any(p.startswith(f"event {i}:") for p in problems):
+            continue
+        if i == 0 and kind != "study":
+            bad(i, f"journal must start with a 'study' header, got {kind!r}")
+        if kind == "study":
+            if i != 0:
+                bad(i, "'study' header after the first line")
+            elif ev["version"] not in KNOWN_VERSIONS:
+                bad(i, f"unknown schema version {ev['version']}")
+        elif kind == "default":
+            n_default += 1
+            if n_default > 1:
+                bad(i, "more than one 'default' event")
+        elif kind == "done":
+            n_done += 1
+            if n_done > 1:
+                bad(i, "more than one 'done' event")
+            elif i != len(events) - 1:
+                bad(i, "'done' is not the final event")
+        elif kind == "ask":
+            if ev["trial"] != len(asked):
+                bad(i, f"trial {ev['trial']} asked out of order "
+                       f"(expected {len(asked)})")
+            asked.add(ev["trial"])
+        else:  # eval / rung / fail / tell
+            t = ev["trial"]
+            if t not in asked:
+                bad(i, f"{kind!r} for trial {t} before its 'ask'")
+                continue
+            if t in terminal:
+                bad(i, f"{kind!r} for trial {t} after terminal "
+                       f"{terminal[t]!r}")
+                continue
+            if kind == "eval":
+                last = epochs_seen.get(t)
+                if last is not None:
+                    if ev["epochs"] <= last:
+                        bad(i, f"trial {t} eval epochs {ev['epochs']} not "
+                               f"> previous {last}")
+                    if not promoted.get(t):
+                        bad(i, f"trial {t} re-evaluated without a "
+                               f"'promote' decision")
+                    else:
+                        promoted[t] -= 1
+                epochs_seen[t] = ev["epochs"]
+            elif kind == "rung":
+                if ev["decision"] not in ("promote", "stop"):
+                    bad(i, f"unknown rung decision {ev['decision']!r}")
+                elif ev["decision"] == "promote":
+                    promoted[t] = promoted.get(t, 0) + 1
+            elif kind == "fail":
+                terminal[t] = "fail"
+            elif kind == "tell":
+                if t not in epochs_seen:
+                    bad(i, f"'tell' for trial {t} with no committed eval")
+                terminal[t] = "tell"
+    return problems
+
+
+def validate_file(path):
+    """Parse + validate one journal file; returns problem strings."""
+    events = []
+    with open(path, "r", encoding="utf-8") as fh:
+        lines = fh.read().split("\n")
+    tail_ok = lines and lines[-1] == ""
+    body = lines[:-1] if lines else []
+    for i, line in enumerate(body):
+        try:
+            events.append(json.loads(line))
+        except ValueError:
+            if i == len(body) - 1 and not tail_ok:
+                break  # torn final write (SIGKILL): tolerated
+            return [f"line {i + 1}: invalid JSON"]
+    return validate_events(events)
+
+
+def main(argv):
+    if not argv:
+        print(__doc__)
+        return 2
+    status = 0
+    for path in argv:
+        problems = validate_file(path)
+        if problems:
+            status = 1
+            print(f"{path}: INVALID")
+            for p in problems:
+                print(f"  {p}")
+        else:
+            print(f"{path}: ok")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
