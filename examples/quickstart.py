@@ -59,6 +59,26 @@ and ``--executor async --slots 1`` reproduces the synchronous path's
 incumbent bit-identically.  Receipts: ``python -m benchmarks.study_async``
 -> ``BENCH_study.json``; journal schema: ``tools/journal_schema.py``.
 
+**Fault-tolerant fleets** (PR 8): ``--executor fleet`` puts the same study
+behind the lease-and-commit coordinator — ``--fleet-workers N`` worker
+*processes* (or remote hosts via ``pool="socket"`` and ``python -m
+repro.core.tune_service.worker --connect HOST:PORT``) drain one shared
+work-unit queue.  Every dispatched unit carries a heartbeat-monitored
+lease: a worker that dies, wedges or loses its result message has its
+lease expired and the unit re-issued to another worker (duplicate
+execution is safe — results are deterministic, the first commit wins and
+any late twin is asserted bitwise equal), and at zero live workers the
+coordinator degrades to its local slot rather than wedging.  The journal
+gains ``lease``/``expire``/``reissue`` events, recorded at commit order,
+so a SIGKILLed coordinator resumes byte-identically even mid-re-issue::
+
+    PYTHONPATH=src python examples/quickstart.py --executor fleet \\
+        --fleet-workers 4 --journal study.jsonl
+
+Receipts (injected 1-in-8 worker kills, utilization, re-issue overhead):
+``python -m benchmarks.study_fleet`` -> ``BENCH_study.json["fleet"]``;
+fault injectors for tests live in ``repro.core.tune_service.faults``.
+
 The optimizer itself runs its compiled hot path by default (PR 5): the
 random-forest surrogate is grown level-synchronously into flat arrays and
 EI acquisition is one fused vectorized pass (jitted on TPU hosts) ending in
@@ -96,11 +116,15 @@ def main():
                     help="common random numbers: all candidates of a batch "
                          "see identical monitoring noise (requires "
                          "--backend jax)")
-    ap.add_argument("--executor", choices=("sync", "async"), default="sync",
-                    help="'async' = slot-saturating trial executor "
-                         "(repro.core.tune_service)")
+    ap.add_argument("--executor", choices=("sync", "async", "fleet"),
+                    default="sync",
+                    help="'async' = slot-saturating trial executor; "
+                         "'fleet' = lease-and-commit coordinator over "
+                         "worker processes (repro.core.tune_service)")
     ap.add_argument("--slots", type=int, default=1,
                     help="async evaluation slots (--executor async)")
+    ap.add_argument("--fleet-workers", type=int, default=2,
+                    help="fleet worker processes (--executor fleet)")
     ap.add_argument("--scheduler", choices=("asha",), default=None,
                     help="ASHA successive-halving early stopping "
                          "(--executor async)")
@@ -119,7 +143,9 @@ def main():
                            else "elementwise", workers=workers,
                            backend=args.backend, crn=args.crn))
     study = Study(spec)
-    if args.executor == "async":
+    if args.executor == "fleet":
+        mode = f"fleet workers={args.fleet_workers}"
+    elif args.executor == "async":
         mode = f"async slots={args.slots}" + \
             (f" +{args.scheduler}" if args.scheduler else "")
     elif args.batch_size > 1:
@@ -128,16 +154,25 @@ def main():
         mode = "sequential"
     print(f"Tuning HeMem for {study.key} (budget {args.budget}, {mode})...")
     print(f"spec: {json.dumps(spec.to_dict())}\n")
-    if args.executor == "async":
+    if args.executor in ("async", "fleet"):
+        fleet_kw = {"workers": args.fleet_workers} \
+            if args.executor == "fleet" else {}
         res = study.tune(budget=args.budget, seed=0, verbose=True,
-                         executor="async", slots=args.slots,
+                         executor=args.executor, slots=args.slots,
                          scheduler=args.scheduler, journal=args.journal,
-                         resume=args.resume)
+                         resume=args.resume, **fleet_kw)
         print(f"\ntrials: {len(res.trials)} "
               f"({res.n_stopped_early} stopped early, "
               f"{res.n_failed} failed) | slot utilization "
               f"{res.utilization:.2f}"
               + (f" | journal: {args.journal}" if args.journal else ""))
+        if res.fleet is not None:
+            fs = res.fleet
+            print(f"fleet: {fs['workers']} {fs['pool']} workers | "
+                  f"{fs['n_worker_deaths']} deaths, "
+                  f"{fs['n_respawns']} respawns, "
+                  f"{fs['n_reissues']} re-issues"
+                  + (" | degraded to local slot" if fs["degraded"] else ""))
     else:
         res = study.tune(budget=args.budget, batch_size=args.batch_size,
                          seed=0, verbose=True)

@@ -578,6 +578,20 @@ def _get_pool(workers: int):
     return _POOL
 
 
+def _discard_pool(pool) -> None:
+    """Forget (and shut down) a broken shared pool so the next
+    :func:`_get_pool` call builds a fresh one — the tuning executor's
+    BrokenProcessPool self-heal path."""
+    global _POOL, _POOL_SIZE
+    try:
+        pool.shutdown(wait=False, cancel_futures=True)
+    except Exception:
+        pass
+    if pool is _POOL:
+        _POOL = None
+        _POOL_SIZE = 0
+
+
 def _shard_worker(args):
     (wl_spec, components, engine_name, configs, machine, fast_slow_ratio,
      seeds, sampler, record_heatmap, heat_bins, fast_capacity_pages,

@@ -155,7 +155,13 @@ class Study:
              scheduler: Optional[str] = None,
              journal: Optional[str] = None, resume: bool = False,
              pool: str = "thread", eta: int = 4,
-             window: Optional[int] = None) -> TuningResult:
+             window: Optional[int] = None,
+             workers: Optional[int] = None, retries: int = 1,
+             timeout_s: Optional[float] = None,
+             faults: Optional[Any] = None,
+             heartbeat_s: Optional[float] = None,
+             lease_deadline: Optional[int] = None,
+             max_respawns: Optional[int] = None) -> TuningResult:
         """SMAC-BO tuning of the spec's engine knobs (§3.1).
 
         ``seed`` seeds the optimizer; the simulation seed stays
@@ -231,8 +237,58 @@ class Study:
         ``TuningResult`` plus the trial table, slot-utilization and
         ASHA-savings receipts); ``benchmarks/study_async.py`` turns those
         into the BENCH_study.json wall-clock receipts.
+
+        **Fault-tolerant fleet tuning** (``executor="fleet",
+        workers=N``).  The same deterministic control loop, but the
+        evaluation slots are N *remote worker processes* driven by a
+        lease-and-commit coordinator
+        (:class:`~repro.core.tune_service.FleetExecutor`) that survives
+        the fleet misbehaving.  Each dispatched work unit carries a
+        lease; the worker heartbeats it every ``heartbeat_s`` while the
+        segment runs.  A lease silent for ``lease_deadline`` heartbeats
+        (a wedged host), a dead worker (crash/SIGKILL — detected
+        immediately), or a lost result message expires the lease and the
+        unit is **re-issued** to another worker with backoff.  Duplicate
+        execution is safe *because* the study is deterministic: a unit is
+        a pure function of its canonical coordinates (seed, batch offset,
+        segment bounds), so both executions return the same bits — the
+        first result to commit wins, and the late twin is asserted
+        bitwise-equal (a free placement-invariance check on every
+        straggler).  Lease lifecycle events
+        (``lease``/``expire``/``reissue``) are journaled at the unit's
+        *commit* point (wall-clock-free, no worker ids), so fleet
+        journals — including kill/resume byte-identity — behave exactly
+        like local ones.  Knobs:
+
+        * ``workers`` — fleet size (defaults to ``slots``); ``pool``
+          picks the transport: ``"process"`` (workers spawned on this
+          box) or ``"socket"`` (workers connect over TCP via ``python -m
+          repro.core.tune_service.worker --connect HOST:PORT``).
+        * ``timeout_s`` — per-unit evaluation bound: a hung objective
+          becomes an ``{"error": "timeout..."}`` result (then a retry /
+          FAILED trial) instead of wedging the study.  Also honoured by
+          the local async executor.
+        * ``retries`` — bounded per-trial retry budget (default 1): a
+          transient fault (worker crash that exhausted its lease
+          attempts, timeout, flaky objective) resubmits the trial's
+          segment once before the trial is journaled FAILED, as a
+          deterministic journaled ``retry`` event.  Also honoured by the
+          local async executor.
+        * ``heartbeat_s`` / ``lease_deadline`` / ``max_respawns`` —
+          heartbeat cadence, lease deadline in *missed-heartbeat counts*
+          (the journal stays wall-clock-free), and the respawn budget for
+          dead process workers (a respawn promotes a booted hot-spare
+          worker when one is up, keeping the interpreter boot off the
+          slot critical path).  When the live fleet hits zero the
+          coordinator degrades gracefully to a local slot — slower,
+          never wedged.
+        * ``faults`` — a
+          :class:`~repro.core.tune_service.FaultPlan` of injected worker
+          faults (kill/stall/hang/drop/dup/delay, keyed by unit +
+          attempt) for robustness testing; see
+          :mod:`repro.core.tune_service.faults`.
         """
-        if executor == "async":
+        if executor in ("async", "fleet"):
             from .tune_service import TuneService
             if batch_size != 1 or objective_batch is not None:
                 raise ValueError(
@@ -244,16 +300,24 @@ class Study:
                 random_prob=random_prob, space=space, surrogate=surrogate,
                 acquisition=acquisition, objective=objective,
                 journal=journal, resume=resume, pool=pool, eta=eta,
-                window=window, verbose=verbose)
+                window=window, verbose=verbose,
+                executor="fleet" if executor == "fleet" else "local",
+                workers=workers, retries=retries, timeout_s=timeout_s,
+                faults=faults, heartbeat_s=heartbeat_s,
+                lease_deadline=lease_deadline, max_respawns=max_respawns)
             return service.run()
         if executor != "sync":
             raise ValueError(f"unknown executor {executor!r}; expected "
-                             f"'sync' or 'async'")
+                             f"'sync', 'async' or 'fleet'")
         if scheduler is not None or slots != 1 or journal is not None \
-                or resume or window is not None:
+                or resume or window is not None or workers is not None \
+                or timeout_s is not None or faults is not None \
+                or heartbeat_s is not None or lease_deadline is not None \
+                or max_respawns is not None:
             raise ValueError(
-                "slots/scheduler/journal/resume/window require "
-                "executor='async'")
+                "slots/scheduler/journal/resume/window/workers/timeout_s/"
+                "faults/heartbeat_s/lease_deadline/max_respawns require "
+                "executor='async' or 'fleet'")
         if objective is None:
             def objective(config: Config) -> float:
                 return self.run(configs=[config])[0].total_s

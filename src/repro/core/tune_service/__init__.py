@@ -1,6 +1,7 @@
-"""Asynchronous trial-executor tuning service (deterministic, resumable).
+"""Asynchronous trial-executor tuning service (deterministic, resumable,
+fault-tolerant).
 
-The package behind ``Study.tune(executor="async", slots=N,
+The package behind ``Study.tune(executor="async"|"fleet", slots=N,
 scheduler="asha"|None, journal=..., resume=...)``:
 
 * :mod:`.trial` — the PENDING/RUNNING/PAUSED/TERMINATED/FAILED trial state
@@ -8,6 +9,14 @@ scheduler="asha"|None, journal=..., resume=...)``:
   loop checkpoint (``lax.scan`` carry);
 * :mod:`.executor` — N saturated evaluation slots (thread/process) with
   results committed in canonical unit-creation order;
+* :mod:`.coordinator` + :mod:`.worker` — the multi-host rung: a
+  lease-and-commit coordinator serving ONE shared work queue to remote
+  worker processes, with heartbeats, straggler re-issue (duplicate
+  execution is safe — first commit wins, the twin is asserted bitwise
+  equal), bounded respawns and graceful degradation to local slots;
+* :mod:`.faults` — the fault-injection harness (kill / stall / hang /
+  drop / dup / delay, keyed by deterministic unit coordinates) driving
+  the robustness test matrix;
 * :mod:`.asha` — asynchronous successive halving over ¼/½/full epoch
   rungs;
 * :mod:`.journal` — the JSON-lines study journal; a killed study resumes
@@ -17,7 +26,10 @@ scheduler="asha"|None, journal=..., resume=...)``:
 """
 
 from .asha import ASHAScheduler, PROMOTE, RUNG_FRACTIONS, STOP
+from .coordinator import FleetExecutor
 from .executor import TrialExecutor
+from .faults import (FailNTimes, FaultPlan, KillNTimes, NO_FAULTS,
+                     SlowObjective, tear_journal)
 from .journal import StudyJournal, VERSION, read_events
 from .service import AsyncTuningResult, TuneService
 from .trial import (FAILED, PAUSED, PENDING, RUNNING, TERMINATED,
@@ -25,7 +37,9 @@ from .trial import (FAILED, PAUSED, PENDING, RUNNING, TERMINATED,
 
 __all__ = [
     "ASHAScheduler", "PROMOTE", "RUNG_FRACTIONS", "STOP",
-    "TrialExecutor",
+    "FleetExecutor", "TrialExecutor",
+    "FailNTimes", "FaultPlan", "KillNTimes", "NO_FAULTS",
+    "SlowObjective", "tear_journal",
     "StudyJournal", "VERSION", "read_events",
     "AsyncTuningResult", "TuneService",
     "FAILED", "PAUSED", "PENDING", "RUNNING", "TERMINATED",

@@ -1,0 +1,688 @@
+"""FleetExecutor: a lease-and-commit trial queue over remote workers.
+
+The multi-host rung of the tuning service (ROADMAP item 3).  One
+coordinator owns the study — the journal, the optimizer, the canonical
+commit order — and serves work units from ONE shared queue to N
+:mod:`.worker` processes (``pool="process"`` on this box, ``pool="socket"``
+across hosts).  The class is a drop-in for
+:class:`~repro.core.tune_service.executor.TrialExecutor` (same
+``submit``/``submit_ready``/``pop_next``/``outstanding`` surface), so the
+:class:`~repro.core.tune_service.service.TuneService` control loop — and
+every determinism property it pins — is reused unchanged.
+
+**Lease-and-commit.**  Each dispatched unit carries a lease: the worker
+must heartbeat it every ``heartbeat_s`` while the segment runs, and a
+lease that goes silent for ``lease_deadline`` heartbeat intervals (or
+whose worker provably died — process sentinel, socket EOF, or an idle
+heartbeat proving the result was lost in flight) **expires**.  An expired
+unit is **re-issued** to another worker, at most ``max_attempts`` times
+with a short backoff, before it is surrendered as an error result (which
+the service turns into a bounded trial ``retry``, then FAILED).
+Re-issue is safe *because* the study is deterministic: a unit is a pure
+function of its canonical coordinates (seed + batch offset + segment
+bounds), so duplicate execution returns the same bits — the first result
+to land commits, and any late twin is **asserted bitwise equal** against
+the committed digest (a cheap, always-on placement-invariance check).
+
+**Determinism of the journal.**  Lease lifecycle events
+(``lease``/``expire``/``reissue``) are collected per unit and journaled
+by the service at the unit's *commit* point, in canonical order — never
+at wall-clock detection time.  Worker ids stay out of the journal
+(placement is irrelevant to the study), deadlines are recorded as
+heartbeat *counts* (wall-clock-free), and each worker runs exactly one
+unit at a time, so an injected fault keyed by ``(unit, attempt)``
+(:mod:`.faults`) perturbs exactly one lease no matter which worker drew
+the unit.  Two runs under the same fault plan therefore write
+byte-identical journals, and a coordinator SIGKILLed mid-re-issue
+resumes byte-identically (the re-issue in flight simply replays).
+
+**Graceful degradation.**  Dead process workers are respawned up to
+``max_respawns`` times — each respawn first promotes a booted hot-spare
+worker when one is up, so the slot refills instantly and the fresh
+interpreter boot (hundreds of milliseconds under the spawn start method)
+happens on the replacement spare, off the critical path.  When the live
+fleet shrinks to zero, queued units run on the coordinator's local slot
+instead — the study finishes slower, never wedges.
+"""
+
+from __future__ import annotations
+
+import collections
+import queue as queue_mod
+import socket
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .executor import _timed_safe
+from .faults import NO_FAULTS, FaultPlan
+from .worker import (DEFAULT_HEARTBEAT_S, process_main, recv_frame,
+                     send_frame, socket_main)
+
+FLEET_POOLS = ("process", "socket")
+
+#: default lease deadline, in missed-heartbeat counts (wall-clock-free)
+DEFAULT_LEASE_DEADLINE = 30
+#: give up re-issuing a unit after this many lease attempts
+DEFAULT_MAX_ATTEMPTS = 4
+
+
+def _result_digest(result: Dict[str, Any]) -> Optional[bytes]:
+    """A canonical digest of a unit result for the duplicate-execution
+    equality assertion (None for error results — tracebacks may differ)."""
+    if "error" in result:
+        return None
+    if "wall_ms" in result:
+        return np.ascontiguousarray(
+            np.asarray(result["wall_ms"], dtype=np.float64)).tobytes()
+    if "value" in result:
+        return repr(float(result["value"])).encode()
+    return None
+
+
+class _ProcessFleet:
+    """Process-transport fleet: mp workers on this box, queue messaging.
+
+    Keeps ``spares`` hot-spare workers booted but never leased: a worker
+    death promotes a spare instantly instead of paying a fresh
+    interpreter boot on the critical path (under the spawn start method
+    a boot costs hundreds of milliseconds of idle slot time per death —
+    the replacement spare boots in the background while both promoted
+    slots keep working)."""
+
+    def __init__(self, n: int, heartbeat_s: float, faults: FaultPlan,
+                 cache_dir: Optional[str], spares: int = 1):
+        import multiprocessing as mp
+        import sys
+        # mirror the simulator pool's choice: forking once jax has
+        # initialized its runtime threads is unsupported
+        use_fork = "fork" in mp.get_all_start_methods() and \
+            "jax" not in sys.modules
+        self._ctx = mp.get_context("fork" if use_fork else "spawn")
+        self._inbox = self._ctx.Queue()
+        self._heartbeat_s = heartbeat_s
+        self._faults = faults
+        self._cache_dir = cache_dir
+        self._procs: Dict[int, Any] = {}
+        self._queues: Dict[int, Any] = {}
+        self._reaped: set = set()
+        self._spares: List[int] = []
+        self.n_promotions = 0
+        self._next_wid = 0
+        for _ in range(n):
+            self._spawn()
+        for _ in range(spares):
+            self._spares.append(self._spawn())
+
+    def _spawn(self) -> int:
+        wid = self._next_wid
+        self._next_wid += 1
+        q = self._ctx.Queue()
+        p = self._ctx.Process(
+            target=process_main,
+            args=(wid, q, self._inbox, self._heartbeat_s, self._faults,
+                  self._cache_dir),
+            daemon=True, name=f"repro-fleet-w{wid}")
+        p.start()
+        self._procs[wid] = p
+        self._queues[wid] = q
+        return wid
+
+    def spawn_worker(self) -> int:
+        # promote a live hot spare if one is up: it is already booted
+        # (and typically greeted), so the slot refills instantly; the
+        # fresh boot happens on the NEW spare, off the critical path
+        while self._spares:
+            wid = self._spares.pop(0)
+            if self._procs[wid].is_alive():
+                self.n_promotions += 1
+                self._spares.append(self._spawn())
+                return wid
+            self._reaped.add(wid)  # spare died while idle: skip it
+        return self._spawn()
+
+    def poll(self, timeout: float) -> Optional[Dict[str, Any]]:
+        try:
+            if timeout <= 0:
+                return self._inbox.get_nowait()
+            return self._inbox.get(timeout=timeout)
+        except queue_mod.Empty:
+            return None
+
+    def send(self, wid: int, msg: Dict[str, Any]) -> None:
+        self._queues[wid].put(msg)
+
+    def dispatchable(self) -> List[int]:
+        """Workers a unit can be sent to right now (spares are held in
+        reserve: they only take work once promoted by a death)."""
+        return [w for w, p in self._procs.items()
+                if w not in self._reaped and w not in self._spares
+                and p.is_alive()]
+
+    def n_eligible(self, suspect) -> int:
+        """Workers that could ever take work (degradation trigger).
+        Suspects don't count: a wedged worker is alive but written off
+        until it speaks again — waiting on it could wedge the study.
+        Spares don't count either: with respawns exhausted they are
+        never promoted, and waiting on one would wedge the study."""
+        return len([w for w in self.dispatchable() if w not in suspect])
+
+    def reap_dead(self) -> List[int]:
+        # a dead hot spare held no lease and no slot: replace it
+        # silently rather than reporting a worker death
+        for wid in list(self._spares):
+            if not self._procs[wid].is_alive():
+                self._spares.remove(wid)
+                self._reaped.add(wid)
+                self._spares.append(self._spawn())
+        dead = [w for w, p in self._procs.items()
+                if w not in self._reaped and w not in self._spares
+                and not p.is_alive()]
+        self._reaped.update(dead)
+        return dead
+
+    def close(self) -> None:
+        for wid, p in self._procs.items():
+            if p.is_alive():
+                try:
+                    self._queues[wid].put({"type": "shutdown"})
+                except Exception:
+                    pass
+        deadline = time.monotonic() + 2.0
+        for p in self._procs.values():
+            p.join(timeout=max(0.0, deadline - time.monotonic()))
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=0.5)
+                if p.is_alive():
+                    p.kill()
+        for q in list(self._queues.values()) + [self._inbox]:
+            try:
+                q.cancel_join_thread()
+                q.close()
+            except Exception:
+                pass
+
+
+class _SocketFleet:
+    """Socket-transport fleet: TCP workers (spawned locally for tests and
+    same-box runs; remote hosts join via ``python -m
+    repro.core.tune_service.worker --connect HOST:PORT``)."""
+
+    def __init__(self, n: int, heartbeat_s: float, faults: FaultPlan,
+                 cache_dir: Optional[str], host: str = "127.0.0.1"):
+        self._srv = socket.create_server((host, 0))
+        self.address: Tuple[str, int] = self._srv.getsockname()[:2]
+        self._inbox: "queue_mod.Queue" = queue_mod.Queue()
+        self._heartbeat_s = heartbeat_s
+        self._lock = threading.Lock()
+        self._conns: Dict[int, socket.socket] = {}
+        self._send_locks: Dict[int, threading.Lock] = {}
+        self._eof: set = set()
+        self._reaped: set = set()
+        self._closing = False
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True,
+            name="repro-fleet-accept")
+        self._accept_thread.start()
+        import multiprocessing as mp
+        import sys
+        use_fork = "fork" in mp.get_all_start_methods() and \
+            "jax" not in sys.modules
+        self._ctx = mp.get_context("fork" if use_fork else "spawn")
+        self._faults = faults
+        self._cache_dir = cache_dir
+        self._procs: Dict[int, Any] = {}
+        self._next_wid = 0
+        for _ in range(n):
+            self.spawn_worker()
+
+    def spawn_worker(self) -> int:
+        wid = self._next_wid
+        self._next_wid += 1
+        p = self._ctx.Process(
+            target=socket_main,
+            args=(self.address, wid, self._heartbeat_s, self._faults,
+                  self._cache_dir),
+            daemon=True, name=f"repro-fleet-w{wid}")
+        p.start()
+        self._procs[wid] = p
+        return wid
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._reader, args=(conn,),
+                             daemon=True).start()
+
+    def _reader(self, conn: socket.socket) -> None:
+        wid = None
+        try:
+            hello = recv_frame(conn)
+            wid = int(hello["worker"])
+            with self._lock:
+                self._conns[wid] = conn
+                self._send_locks[wid] = threading.Lock()
+            self._inbox.put(hello)
+            while True:
+                self._inbox.put(recv_frame(conn))
+        except (EOFError, OSError):
+            if wid is not None:
+                with self._lock:
+                    self._eof.add(wid)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def poll(self, timeout: float) -> Optional[Dict[str, Any]]:
+        try:
+            if timeout <= 0:
+                return self._inbox.get_nowait()
+            return self._inbox.get(timeout=timeout)
+        except queue_mod.Empty:
+            return None
+
+    def send(self, wid: int, msg: Dict[str, Any]) -> None:
+        with self._send_locks[wid]:
+            send_frame(self._conns[wid], msg)
+
+    def dispatchable(self) -> List[int]:
+        with self._lock:
+            return [w for w in self._conns
+                    if w not in self._eof and w not in self._reaped]
+
+    def n_eligible(self, suspect) -> int:
+        # not-yet-connected spawned workers count: they are on their way;
+        # suspects (wedged, written off until they speak) do not
+        with self._lock:
+            live_procs = sum(1 for w, p in self._procs.items()
+                             if w not in self._reaped and w not in self._eof
+                             and w not in suspect and p.is_alive())
+            live_ext = sum(1 for w in self._conns
+                           if w not in self._eof and w not in self._reaped
+                           and w not in suspect and w not in self._procs)
+        return live_procs + live_ext
+
+    def reap_dead(self) -> List[int]:
+        with self._lock:
+            dead = set(self._eof) - self._reaped
+            dead |= {w for w, p in self._procs.items()
+                     if w not in self._reaped and not p.is_alive()}
+            self._reaped.update(dead)
+        return sorted(dead)
+
+    def close(self) -> None:
+        self._closing = True
+        for wid in self.dispatchable():
+            try:
+                self.send(wid, {"type": "shutdown"})
+            except OSError:
+                pass
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+        deadline = time.monotonic() + 2.0
+        for p in self._procs.values():
+            p.join(timeout=max(0.0, deadline - time.monotonic()))
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=0.5)
+                if p.is_alive():
+                    p.kill()
+        with self._lock:
+            for conn in self._conns.values():
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+
+class FleetExecutor:
+    """``workers`` remote evaluation slots behind the lease-and-commit
+    protocol, committed in canonical unit-creation order.  Drop-in for
+    :class:`~repro.core.tune_service.executor.TrialExecutor`.
+
+    ``busy_s`` is slot *occupancy* — wall time leases were held (issue to
+    result, or to fault detection for expired leases) — not worker-side
+    compute time: a coordinator doesn't control its workers' clocks, and
+    occupancy is what the utilization receipt must measure (an aborted
+    attempt occupied its slot; only detection/respawn/backoff gaps and
+    starvation count as idle)."""
+
+    def __init__(self, workers: int, pool: str = "process",
+                 heartbeat_s: float = DEFAULT_HEARTBEAT_S,
+                 lease_deadline: int = DEFAULT_LEASE_DEADLINE,
+                 timeout_s: Optional[float] = None,
+                 faults: FaultPlan = NO_FAULTS,
+                 max_attempts: int = DEFAULT_MAX_ATTEMPTS,
+                 max_respawns: Optional[int] = None,
+                 backoff_s: float = 0.05):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if pool not in FLEET_POOLS:
+            raise ValueError(f"unknown fleet pool {pool!r}; expected one "
+                             f"of {FLEET_POOLS}")
+        if lease_deadline < 1:
+            raise ValueError("lease_deadline must be >= 1 heartbeat")
+        self.slots = int(workers)
+        self.pool_kind = pool
+        self.heartbeat_s = float(heartbeat_s)
+        self.lease_deadline = int(lease_deadline)
+        self.timeout_s = timeout_s
+        self.faults = faults if faults is not None else NO_FAULTS
+        self.max_attempts = int(max_attempts)
+        self.max_respawns = int(max_respawns) if max_respawns is not None \
+            else int(workers)
+        self.backoff_s = float(backoff_s)
+        from ..simulator import compile_cache_dir
+        cls = _ProcessFleet if pool == "process" else _SocketFleet
+        self._fleet = cls(self.slots, self.heartbeat_s, self.faults,
+                          compile_cache_dir())
+        # unit state, keyed by canonical sequence number
+        self._specs: Dict[int, Tuple[Callable, tuple, Optional[float]]] = {}
+        self._queue: "collections.deque[Tuple[int, float]]" = \
+            collections.deque()
+        self._ready: Dict[int, Dict[str, Any]] = {}
+        self._leases: Dict[int, Dict[str, Any]] = {}
+        self._history: Dict[int, List[Dict[str, Any]]] = {}
+        self._attempts: Dict[int, int] = {}
+        self._digest: Dict[int, Optional[bytes]] = {}
+        self._busy: Dict[int, int] = {}       # worker id -> unit seq
+        self._suspect: set = set()            # wedged until they speak
+        # workers that have spoken (hello or any later message).  A unit
+        # is only ever leased to a greeted worker: a spawned process that
+        # is still booting (interpreter start can take seconds once jax
+        # forces the spawn start method) is not an issue target, and
+        # leasing against it would start the silence clock on a worker
+        # that cannot heartbeat yet — the lease would expire through no
+        # fault of the protocol.  Booting workers still count as
+        # *eligible* (they are on their way), so the coordinator does not
+        # degrade to its local slot during a respawn.
+        self._greeted: set = set()
+        self._next_seq = 0
+        self._next_commit = 0
+        self.busy_s = 0.0
+        # local degradation slot (lazy)
+        self._local = None
+        self._local_futs: Dict[int, Tuple[Any, float]] = {}
+        # receipts
+        self.n_reissues = 0
+        self.n_expired = 0
+        self.n_worker_deaths = 0
+        self.n_respawns = 0
+        self.n_duplicates = 0
+        self.reissue_overhead_s = 0.0
+        self.recover_s: List[float] = []
+        self.degraded = False
+
+    # -- submission --------------------------------------------------------
+    def submit(self, fn: Callable[..., Dict[str, Any]], *args,
+               timeout_s: Optional[float] = None) -> int:
+        seq = self._next_seq
+        self._next_seq += 1
+        t = timeout_s if timeout_s is not None else self.timeout_s
+        self._specs[seq] = (fn, args, t)
+        self._history[seq] = []
+        self._attempts[seq] = 0
+        self._queue.append((seq, 0.0))
+        self._pump(block=False)
+        return seq
+
+    def submit_ready(self, result: Dict[str, Any]) -> int:
+        """A pre-resolved unit (journal-replay cache hit): holds its
+        canonical commit slot, never touches the fleet."""
+        seq = self._next_seq
+        self._next_seq += 1
+        self._ready[seq] = dict(result)
+        return seq
+
+    @property
+    def outstanding(self) -> int:
+        return self._next_seq - self._next_commit
+
+    # -- canonical-order commits ------------------------------------------
+    def pop_next(self) -> Tuple[int, Dict[str, Any]]:
+        seq = self._next_commit
+        while seq not in self._ready:
+            self._pump(block=True)
+        result = self._ready.pop(seq)
+        self._digest[seq] = _result_digest(result)
+        self._specs.pop(seq, None)
+        self._attempts.pop(seq, None)
+        self._next_commit += 1
+        return seq, result
+
+    def take_history(self, seq: int) -> List[Dict[str, Any]]:
+        """The unit's lease lifecycle events, for commit-time journaling."""
+        return self._history.pop(seq, [])
+
+    # -- the pump: messages, liveness, leases, dispatch --------------------
+    def _pump(self, block: bool) -> None:
+        msg = self._fleet.poll(min(self.heartbeat_s, 0.05) if block else 0.0)
+        while msg is not None:
+            self._handle(msg)
+            msg = self._fleet.poll(0.0)
+        self._check_workers()
+        self._check_leases()
+        self._check_local()
+        self._dispatch()
+
+    def _handle(self, msg: Dict[str, Any]) -> None:
+        kind = msg.get("type")
+        wid = msg.get("worker")
+        if wid is not None:
+            self._suspect.discard(wid)
+            self._greeted.add(wid)
+        if kind == "hello":
+            return
+        if kind == "heartbeat":
+            unit = msg.get("unit")
+            if unit is None:
+                # an idle heartbeat from a worker we believe is busy means
+                # its result was lost in flight — expire the lease now
+                seq = self._busy.get(wid)
+                if seq is not None:
+                    lease = self._leases.get(seq)
+                    if lease is not None and lease["worker"] == wid and \
+                            time.monotonic() - lease["issued"] > \
+                            3 * self.heartbeat_s:
+                        self._busy.pop(wid, None)
+                        self._expire(seq, "lost")
+                return
+            lease = self._leases.get(unit)
+            if lease is not None and lease["worker"] == wid and \
+                    lease["attempt"] == msg.get("attempt"):
+                lease["last_seen"] = time.monotonic()
+            return
+        if kind == "result":
+            seq = int(msg["unit"])
+            if self._busy.get(wid) == seq:
+                self._busy.pop(wid)
+            result = msg["result"]
+            if seq < self._next_commit or seq in self._ready:
+                # a duplicate or late twin: first commit won; assert the
+                # twin returned the SAME bits (placement invariance).  The
+                # twin's runtime is wasted occupancy: the slot was busy,
+                # the work was redundant
+                self._assert_twin(seq, result)
+                self.n_duplicates += 1
+                self.busy_s += float(result.get("slot_s", 0.0))
+                self.reissue_overhead_s += float(result.get("slot_s", 0.0))
+                return
+            lease = self._leases.pop(seq, None)
+            if lease is None and seq not in self._attempts:
+                return  # unit unknown (e.g. surrendered and committed)
+            # accept whichever attempt lands first; cancel any queued
+            # re-issue of the same unit
+            self._unqueue(seq)
+            if lease is not None:
+                # slot occupancy: wall time the lease was held, issue to
+                # result — NOT worker-reported compute time, which a
+                # coordinator doesn't control (and which shrinks under
+                # less CPU contention, masking idle slots)
+                self.busy_s += time.monotonic() - lease["issued"]
+            self._ready[seq] = result
+            return
+
+    def _assert_twin(self, seq: int, result: Dict[str, Any]) -> None:
+        want = self._digest.get(seq, _result_digest(self._ready.get(seq, {})))
+        got = _result_digest(result)
+        if want is not None and got is not None and want != got:
+            raise RuntimeError(
+                f"duplicate execution of unit {seq} returned different "
+                f"bits — the evaluation is not placement-invariant (this "
+                f"is a determinism bug, not a fleet fault)")
+
+    def _unqueue(self, seq: int) -> None:
+        for entry in list(self._queue):
+            if entry[0] == seq:
+                self._queue.remove(entry)
+
+    def _check_workers(self) -> None:
+        for wid in self._fleet.reap_dead():
+            self.n_worker_deaths += 1
+            self._suspect.discard(wid)
+            seq = self._busy.pop(wid, None)
+            if seq is not None and seq in self._leases:
+                self._expire(seq, "worker-dead")
+            if self.n_respawns < self.max_respawns:
+                self.n_respawns += 1
+                self._fleet.spawn_worker()
+
+    def _check_leases(self) -> None:
+        now = time.monotonic()
+        silence = self.heartbeat_s * self.lease_deadline
+        for seq, lease in list(self._leases.items()):
+            if now - lease["last_seen"] > silence:
+                # wedged, not provably dead: write the worker off until it
+                # speaks again, but leave it marked busy (never re-booked)
+                self._suspect.add(lease["worker"])
+                self._expire(seq, "expired")
+
+    def _expire(self, seq: int, reason: str) -> None:
+        lease = self._leases.pop(seq, None)
+        if lease is None:
+            return
+        now = time.monotonic()
+        attempt = lease["attempt"]
+        self.n_expired += 1
+        self.recover_s.append(now - lease["last_seen"])
+        # the doomed attempt occupied its slot from issue until the fault
+        # was detected: wasted occupancy, not idle time — count it as
+        # both busy and re-issue overhead so utilization measures idle
+        # slots and reissue_overhead_s measures burned wall clock
+        held = max(0.0, now - lease["issued"])
+        self.busy_s += held
+        self.reissue_overhead_s += held
+        self._history[seq].append(
+            {"event": "expire", "unit": seq, "attempt": attempt,
+             "reason": reason})
+        nxt = attempt + 1
+        if nxt >= self.max_attempts:
+            self._ready[seq] = {
+                "error": f"lease expired {nxt} times (unit {seq}, last "
+                         f"reason: {reason}); the fleet could not complete "
+                         f"this unit", "slot_s": 0.0}
+            return
+        self._attempts[seq] = nxt
+        self.n_reissues += 1
+        self._history[seq].append(
+            {"event": "reissue", "unit": seq, "attempt": nxt})
+        # the first re-issue goes out immediately (the expiry already cost
+        # detection latency); repeated failures of the SAME unit back off
+        self._queue.appendleft((seq, now + self.backoff_s * (nxt - 1)))
+
+    def _dispatch(self) -> None:
+        while self._queue:
+            seq, not_before = self._queue[0]
+            now = time.monotonic()
+            if not_before > now:
+                break  # re-issue backoff; re-checked on the next pump
+            wid = self._idle_worker()
+            if wid is None:
+                if self._fleet.n_eligible(self._suspect) == 0:
+                    self._queue.popleft()
+                    self._run_local(seq)
+                    continue
+                break
+            self._queue.popleft()
+            attempt = self._attempts[seq]
+            fn, args, t = self._specs[seq]
+            self._fleet.send(wid, {"type": "unit", "unit": seq,
+                                   "attempt": attempt, "fn": fn,
+                                   "args": args, "timeout_s": t})
+            self._leases[seq] = {"worker": wid, "attempt": attempt,
+                                 "issued": now, "last_seen": now}
+            self._busy[wid] = seq
+            if attempt == 0:
+                self._history[seq].append(
+                    {"event": "lease", "unit": seq, "attempt": 0,
+                     "deadline": self.lease_deadline})
+
+    def _idle_worker(self) -> Optional[int]:
+        for wid in self._fleet.dispatchable():
+            if wid not in self._busy and wid not in self._suspect \
+                    and wid in self._greeted:
+                return wid
+        return None
+
+    # -- graceful degradation: the coordinator's local slot ----------------
+    def _run_local(self, seq: int) -> None:
+        if self._local is None:
+            import concurrent.futures
+            self._local = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="repro-fleet-local")
+        self.degraded = True
+        attempt = self._attempts[seq]
+        fn, args, _ = self._specs[seq]
+        if attempt == 0:
+            self._history[seq].append(
+                {"event": "lease", "unit": seq, "attempt": 0,
+                 "deadline": self.lease_deadline})
+        self._local_futs[seq] = (self._local.submit(_timed_safe, fn, *args),
+                                 time.monotonic())
+
+    def _check_local(self) -> None:
+        for seq, (fut, t0) in list(self._local_futs.items()):
+            _, _, t = self._specs.get(seq, (None, None, None))
+            if fut.done():
+                del self._local_futs[seq]
+                self.busy_s += time.monotonic() - t0
+                self._ready[seq] = fut.result()
+            elif t is not None and time.monotonic() - t0 > t:
+                fut.cancel()
+                del self._local_futs[seq]
+                self.busy_s += time.monotonic() - t0
+                self._ready[seq] = {
+                    "error": f"timeout: unit {seq} exceeded {t}s on the "
+                             f"local degradation slot", "timeout": True,
+                    "slot_s": float(t)}
+
+    # -- receipts / shutdown ----------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "workers": self.slots,
+            "pool": self.pool_kind,
+            "n_reissues": self.n_reissues,
+            "n_expired_leases": self.n_expired,
+            "n_worker_deaths": self.n_worker_deaths,
+            "n_respawns": self.n_respawns,
+            "n_spare_promotions": getattr(self._fleet, "n_promotions", 0),
+            "n_duplicate_results": self.n_duplicates,
+            "reissue_overhead_s": float(self.reissue_overhead_s),
+            "time_to_recover_s": [float(x) for x in self.recover_s],
+            "degraded": self.degraded,
+        }
+
+    def close(self) -> None:
+        self._fleet.close()
+        if self._local is not None:
+            self._local.shutdown(wait=False, cancel_futures=True)

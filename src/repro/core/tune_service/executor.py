@@ -26,6 +26,19 @@ Two slot backends:
 Failures never kill a slot: unit callables are wrapped, exceptions come
 back as ``{"error": <traceback>}`` results, and the service records a
 FAILED trial and keeps the window full (the fault-injection satellite).
+Two further slot-level faults are absorbed here rather than killing the
+study:
+
+* a hung evaluation — a per-unit ``timeout_s`` bounds the canonical-next
+  wait and converts the unit into an ``{"error": "timeout..."}`` result
+  (the wedged thread/process slot is abandoned);
+* a dead ``pool="process"`` worker — ``BrokenProcessPool`` poisons every
+  pending future in the shared pool, so the executor discards the broken
+  pool, builds a fresh one and resubmits ALL outstanding units.  Results
+  are deterministic, so the journal stays byte-identical to a fault-free
+  run; only wall-clock suffers.  Rebuilds are bounded
+  (:data:`MAX_POOL_REBUILDS`) so a poisoned objective cannot respawn
+  forever.
 """
 
 from __future__ import annotations
@@ -35,6 +48,15 @@ import traceback
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 POOLS = ("thread", "process")
+
+#: bound on BrokenProcessPool self-heals per executor
+MAX_POOL_REBUILDS = 3
+
+try:  # BrokenExecutor subsumes BrokenProcessPool (py3.7+)
+    from concurrent.futures import BrokenExecutor as BrokenPoolError
+except ImportError:  # pragma: no cover
+    from concurrent.futures.process import \
+        BrokenProcessPool as BrokenPoolError
 
 
 def _timed_safe(fn: Callable[..., Dict[str, Any]], *args
@@ -58,7 +80,8 @@ class TrialExecutor:
     """``slots`` evaluation slots over a thread/process pool, with results
     committed in unit-creation order."""
 
-    def __init__(self, slots: int, pool: str = "thread"):
+    def __init__(self, slots: int, pool: str = "thread",
+                 timeout_s: Optional[float] = None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if pool not in POOLS:
@@ -66,6 +89,7 @@ class TrialExecutor:
                              f"{POOLS}")
         self.slots = int(slots)
         self.pool_kind = pool
+        self.timeout_s = timeout_s  # default per-unit hang bound
         if pool == "process":
             from ..simulator import _get_pool
             self._pool = _get_pool(self.slots)
@@ -77,18 +101,32 @@ class TrialExecutor:
                 thread_name_prefix="repro-tune-slot")
             self._owns_pool = True
         self._futures: Dict[int, Any] = {}
+        # (fn, args, timeout_s) per live unit — resubmission after a pool
+        # heal, and the per-unit hang bound
+        self._specs: Dict[int, Tuple[Callable, tuple, Optional[float]]] = {}
+        self._rebuilds = 0
         self._next_seq = 0
         self._next_commit = 0
         self.busy_s = 0.0  # summed slot occupancy (utilization receipt)
 
     # -- submission --------------------------------------------------------
-    def submit(self, fn: Callable[..., Dict[str, Any]], *args) -> int:
+    def submit(self, fn: Callable[..., Dict[str, Any]], *args,
+               timeout_s: Optional[float] = None) -> int:
         """Enqueue one unit (FIFO; the pool keeps <= slots running).
         Returns the unit's canonical sequence number."""
         seq = self._next_seq
         self._next_seq += 1
-        self._futures[seq] = self._pool.submit(_timed_safe, fn, *args)
+        t = timeout_s if timeout_s is not None else self.timeout_s
+        self._specs[seq] = (fn, args, t)
+        self._futures[seq] = self._safe_submit(fn, args)
         return seq
+
+    def _safe_submit(self, fn: Callable, args: tuple):
+        try:
+            return self._pool.submit(_timed_safe, fn, *args)
+        except BrokenPoolError:
+            self._heal()
+            return self._pool.submit(_timed_safe, fn, *args)
 
     def submit_ready(self, result: Dict[str, Any]) -> int:
         """Enqueue a pre-resolved unit (journal-replay cache hit): it holds
@@ -106,14 +144,79 @@ class TrialExecutor:
 
     def pop_next(self) -> Tuple[int, Dict[str, Any]]:
         """Block for the canonical-next unit's result (later finishers
-        buffer inside their futures until their turn)."""
+        buffer inside their futures until their turn).  A unit exceeding
+        its ``timeout_s`` wait comes back as an ``{"error": "timeout..."}``
+        result instead of wedging the study; a dead process-pool worker
+        triggers a bounded pool rebuild + resubmission of every
+        outstanding unit."""
+        import concurrent.futures as cf
         seq = self._next_commit
         fut = self._futures.pop(seq)
-        result = fut if isinstance(fut, dict) else fut.result()
+        if isinstance(fut, dict):
+            result = fut
+        else:
+            _, _, t = self._specs.get(seq, (None, (), None))
+            deadline = None if t is None else time.monotonic() + t
+            while True:
+                try:
+                    left = None if deadline is None else \
+                        max(0.0, deadline - time.monotonic())
+                    result = fut.result(timeout=left)
+                    break
+                except cf.TimeoutError:
+                    fut.cancel()  # queued: freed; running: slot abandoned
+                    result = {"error": f"timeout: unit {seq} exceeded "
+                                       f"{t}s in the {self.pool_kind} "
+                                       f"pool", "timeout": True,
+                              "slot_s": float(t)}
+                    break
+                except BrokenPoolError:
+                    # the canonical-next unit was already popped from
+                    # _futures, so _heal's resubmission loop misses it —
+                    # resubmit it on the fresh pool here
+                    self._heal()
+                    fn, args, _ = self._specs[seq]
+                    fut = self._pool.submit(_timed_safe, fn, *args)
+        self._specs.pop(seq, None)
         self._next_commit += 1
         self.busy_s += float(result.get("slot_s", 0.0))
         return seq, result
 
+    def _heal(self) -> None:
+        """A broken process pool poisons every pending future: discard it,
+        build a fresh pool and resubmit all outstanding units.  Unit
+        results are deterministic, so re-execution changes nothing the
+        journal sees — the fault costs wall clock only."""
+        if self.pool_kind != "process":
+            raise RuntimeError("thread pool broke — cannot self-heal")
+        if self._rebuilds >= MAX_POOL_REBUILDS:
+            raise RuntimeError(
+                f"process pool broke {self._rebuilds + 1} times "
+                f"(> MAX_POOL_REBUILDS={MAX_POOL_REBUILDS}); giving up — "
+                f"the objective is likely killing its workers")
+        self._rebuilds += 1
+        from ..simulator import _discard_pool, _get_pool
+        _discard_pool(self._pool)
+        self._pool = _get_pool(self.slots)
+        for seq, fut in list(self._futures.items()):
+            if isinstance(fut, dict):
+                continue  # replay cache hit: no evaluation to redo
+            fn, args, _ = self._specs[seq]
+            self._futures[seq] = self._pool.submit(_timed_safe, fn, *args)
+
+    def take_history(self, seq: int) -> List[Dict[str, Any]]:
+        """Lease lifecycle events for commit-time journaling.  Local slots
+        have no leases — the fleet coordinator overrides this."""
+        return []
+
     def close(self) -> None:
+        """Shut down, cancelling queued units so an aborted study doesn't
+        leave orphan segments burning slots (running units cannot be
+        interrupted, but their results are dropped)."""
+        for fut in self._futures.values():
+            if not isinstance(fut, dict):
+                fut.cancel()
+        self._futures.clear()
+        self._specs.clear()
         if self._owns_pool:
-            self._pool.shutdown(wait=True)
+            self._pool.shutdown(wait=True, cancel_futures=True)

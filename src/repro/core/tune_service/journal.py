@@ -34,6 +34,18 @@ Event types (all objects carry ``"event"``):
     (``"promote"``/``"stop"``).
 ``fail``
     A FAILED trial: ``trial``, attempted ``epochs``, ``error`` traceback.
+``retry``
+    A bounded trial retry (version 2): ``trial``, the retry ``attempt``
+    number, attempted ``epochs``, the transient ``error`` being retried.
+``lease`` / ``expire`` / ``reissue``
+    Fleet lease lifecycle (version 2), journaled as the work unit's
+    attempt history at its COMMIT point — never at wall-clock detection
+    time — so fleet journals stay deterministic.  ``lease`` records the
+    unit's first dispatch (``unit``, ``attempt`` 0, the configured
+    ``deadline`` in heartbeat counts — wall-clock-free); ``expire``
+    records a lost lease (``unit``, ``attempt``, ``reason``); ``reissue``
+    records the straggler re-issue that followed (``unit``, the new
+    ``attempt``).
 ``tell``
     An optimizer update: ``trial``, CRN ``group``, the (possibly
     extrapolated / CRN-debiased) ``value`` recorded.
@@ -51,7 +63,9 @@ import os
 from typing import Any, Dict, List, Optional
 
 #: journal schema version (bumped on incompatible event changes)
-VERSION = 1
+#: v2: adds ``retry`` and the fleet lease lifecycle events
+#: (``lease``/``expire``/``reissue``)
+VERSION = 2
 
 
 def _read_clean(path: str) -> "tuple[List[Dict[str, Any]], int]":
@@ -125,6 +139,43 @@ class StudyJournal:
             if all(ev.get(k) == v for k, v in match.items()):
                 return ev
         return None
+
+    def lookup_first(self, events: "tuple", **match
+                     ) -> Optional[Dict[str, Any]]:
+        """Find the FIRST not-yet-consumed replay event whose type is any
+        of ``events`` and whose fields match.  Order matters when a trial
+        segment was retried: its ``retry`` event precedes the eventual
+        ``eval``/``fail`` at the same epochs, and replay must rediscover
+        them in that order."""
+        for ev in self._replay[self._pos:]:
+            if ev.get("event") not in events:
+                continue
+            if all(ev.get(k) == v for k, v in match.items()):
+                return ev
+        return None
+
+    def consume_history(self, events: "tuple",
+                        unit: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Consume the contiguous run of recorded events at the cursor
+        whose type is in ``events`` (optionally pinned to one ``unit``)
+        and return them.
+
+        This is the replay path for fleet lease histories attached to a
+        CACHED unit (a replay cache hit never re-executes, so nothing
+        re-generates its ``lease``/``expire``/``reissue`` events — the
+        recorded ones are adopted verbatim).  Live units re-generate their
+        histories deterministically and go through the strict
+        :meth:`append` check instead."""
+        out: List[Dict[str, Any]] = []
+        while self._pos < len(self._replay):
+            ev = self._replay[self._pos]
+            if ev.get("event") not in events:
+                break
+            if unit is not None and ev.get("unit") != unit:
+                break
+            out.append(ev)
+            self._pos += 1
+        return out
 
     # -- append ------------------------------------------------------------
     def append(self, event: Dict[str, Any],

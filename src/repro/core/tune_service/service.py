@@ -42,10 +42,15 @@ from ..simulator import run_simulation_segment
 from ..workloads import make_workload
 from .asha import ASHAScheduler, PROMOTE
 from .executor import TrialExecutor
+from .faults import NO_FAULTS, FaultPlan
 from .journal import VERSION, StudyJournal
 from .trial import FAILED, PAUSED, RUNNING, TERMINATED, Trial
 
 SCHEDULERS = (None, "asha")
+EXECUTORS = ("local", "fleet")
+
+#: fleet lease lifecycle event types (journaled at unit commit time)
+HISTORY_EVENTS = ("lease", "expire", "reissue")
 
 
 def _jsonify(obj):
@@ -121,6 +126,9 @@ class AsyncTuningResult(TuningResult):
     makespan_s: float = 0.0             # submit-to-last-commit wall clock
     journal_path: Optional[str] = None
     resumed: bool = False
+    #: fleet receipt (:meth:`FleetExecutor.stats`): re-issue counts,
+    #: worker deaths/respawns, re-issue overhead, time-to-recover
+    fleet: Optional[Dict[str, Any]] = None
 
     @property
     def utilization(self) -> float:
@@ -179,10 +187,25 @@ class TuneService:
                  journal: Optional[str] = None, resume: bool = False,
                  pool: str = "thread", eta: int = 4,
                  window: Optional[int] = None,
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 executor: str = "local", workers: Optional[int] = None,
+                 retries: int = 1, timeout_s: Optional[float] = None,
+                 faults: FaultPlan = NO_FAULTS,
+                 heartbeat_s: Optional[float] = None,
+                 lease_deadline: Optional[int] = None,
+                 max_respawns: Optional[int] = None):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; expected "
                              f"one of {SCHEDULERS}")
+        if executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {executor!r}; expected "
+                             f"one of {EXECUTORS}")
+        if executor == "fleet":
+            from .coordinator import FLEET_POOLS
+            if workers is not None:
+                slots = int(workers)
+            if pool not in FLEET_POOLS:
+                pool = "process"  # fleet workers are remote by definition
         if scheduler is not None and objective is not None:
             raise ValueError(
                 "scheduler='asha' needs partial-epoch objectives, which "
@@ -207,6 +230,16 @@ class TuneService:
         self.pool = pool
         self.verbose = verbose
         self.objective = objective
+        self.executor_kind = executor
+        self.retries = int(retries)
+        self.timeout_s = timeout_s
+        self.faults = faults if faults is not None else NO_FAULTS
+        self.heartbeat_s = heartbeat_s
+        self.lease_deadline = lease_deadline
+        self.max_respawns = max_respawns
+        # fleet workers (and process slots) evaluate in other processes, so
+        # units ship the workload spec tuple rather than the built object
+        self._ship_spec = pool in ("process", "socket")
         self.crn = bool(self.spec.options.crn)
         self.space = space if space is not None \
             else get_space(self.spec.engine.name)
@@ -240,6 +273,11 @@ class TuneService:
             "optimizer": optimizer, "opt_seed": self.seed,
             "n_init": int(n_init), "random_prob": float(random_prob),
             "custom_objective": objective is not None,
+            "executor": self.executor_kind, "retries": self.retries,
+            # the lease deadline is a heartbeat COUNT (wall-clock-free);
+            # None defers to the coordinator default
+            "lease_deadline": self.lease_deadline,
+            "timeout_s": self.timeout_s,
         }
         self._machine = study.machine
         opts = self.spec.options
@@ -277,7 +315,7 @@ class TuneService:
             "lo": lo, "hi": hi, "carry": carry,
             "return_carry": self._can_checkpoint,
         }
-        if self.pool == "process":
+        if self._ship_spec:
             p["wl_spec"] = (wl.name, wl.input_name, wl.threads, wl.scale,
                             wl.seed)
         else:
@@ -294,22 +332,28 @@ class TuneService:
             if t is None:
                 hit = self.journal.lookup("default")
                 if hit is not None:
+                    unit["cached"] = True
                     unit["seq"] = ex.submit_ready(
                         {"cached_value": hit["value"]})
                     self._units[unit["seq"]] = unit
                     return
             else:
-                hit = self.journal.lookup("eval", trial=t.index,
-                                          epochs=unit["hi"])
+                # the FIRST unconsumed event at (trial, epochs) decides the
+                # unit's replayed fate: a ``retry`` precedes the eventual
+                # ``eval``/``fail`` at the same epochs, so an errored
+                # attempt replays its error (and re-journals the retry at
+                # commit) before the resubmitted twin finds the final value
+                hit = self.journal.lookup_first(
+                    ("retry", "eval", "fail"), trial=t.index,
+                    epochs=unit["hi"])
                 if hit is not None:
-                    unit["seq"] = ex.submit_ready(
-                        {"cached_value": hit["value"]})
-                    self._units[unit["seq"]] = unit
-                    return
-                fhit = self.journal.lookup("fail", trial=t.index,
-                                           epochs=unit["hi"])
-                if fhit is not None:
-                    unit["seq"] = ex.submit_ready({"error": fhit["error"]})
+                    unit["cached"] = True
+                    if hit["event"] == "eval":
+                        unit["seq"] = ex.submit_ready(
+                            {"cached_value": hit["value"]})
+                    else:
+                        unit["seq"] = ex.submit_ready(
+                            {"error": hit["error"]})
                     self._units[unit["seq"]] = unit
                     return
         config = self.space.default_config() if t is None else t.config
@@ -372,8 +416,22 @@ class TuneService:
             return event
         return self.journal.append(event)
 
+    def _journal_history(self, seq: int, unit: Dict[str, Any]) -> None:
+        """Journal the unit's fleet lease history (lease/expire/reissue) at
+        its commit point — the only place those events are deterministic.
+        Live units re-generated their histories and append strictly; a
+        replay cache hit never re-executed, so its recorded history is
+        adopted verbatim."""
+        if unit.get("cached"):
+            if self.journal is not None:
+                self.journal.consume_history(HISTORY_EVENTS, unit=seq)
+            return
+        for ev in self.executor.take_history(seq):
+            self._journal(ev)
+
     def _commit(self, seq: int, result: Dict[str, Any]) -> None:
         unit = self._units.pop(seq)
+        self._journal_history(seq, unit)
         t: Optional[Trial] = unit.get("trial")
         if t is None:  # the default-config baseline
             if "error" in result:
@@ -388,6 +446,19 @@ class TuneService:
             return
         t.wall_s += float(result.get("slot_s", 0.0))
         if "error" in result:
+            if t.attempt < self.retries:
+                # bounded retry: one transient fault must not discard the
+                # trial's budget.  The retry is a journaled, deterministic
+                # event — replay reproduces it — and the trial stays
+                # RUNNING while its segment is resubmitted.
+                t.attempt += 1
+                self._journal({"event": "retry", "trial": t.index,
+                               "attempt": t.attempt, "epochs": unit["hi"],
+                               "error": result["error"]})
+                self._submit_unit({"trial": t, "rung": t.rung,
+                                   "lo": t.epochs_run, "hi": unit["hi"]})
+                self._refill()
+                return
             t.advance(FAILED)
             t.error = result["error"]
             t.epochs_run = unit["hi"]
@@ -477,7 +548,20 @@ class TuneService:
     def run(self) -> AsyncTuningResult:
         t0 = time.time()
         self._journal(self._header)
-        self.executor = TrialExecutor(self.slots, self.pool)
+        if self.executor_kind == "fleet":
+            from .coordinator import FleetExecutor
+            kw: Dict[str, Any] = {"timeout_s": self.timeout_s,
+                                  "faults": self.faults}
+            if self.heartbeat_s is not None:
+                kw["heartbeat_s"] = self.heartbeat_s
+            if self.lease_deadline is not None:
+                kw["lease_deadline"] = self.lease_deadline
+            if self.max_respawns is not None:
+                kw["max_respawns"] = self.max_respawns
+            self.executor = FleetExecutor(self.slots, pool=self.pool, **kw)
+        else:
+            self.executor = TrialExecutor(self.slots, self.pool,
+                                          timeout_s=self.timeout_s)
         try:
             mk0 = time.perf_counter()
             # the default-config baseline evaluates first, exactly like the
@@ -502,7 +586,9 @@ class TuneService:
                                      if r["state"] == TERMINATED),
                 epochs_evaluated=self._epochs_evaluated,
                 busy_s=self.executor.busy_s, makespan_s=makespan,
-                journal_path=self.journal_path, resumed=self.resumed)
+                journal_path=self.journal_path, resumed=self.resumed,
+                fleet=self.executor.stats()
+                if self.executor_kind == "fleet" else None)
             best = result.best_row
             self._journal({
                 "event": "done", "best_trial": best["index"],

@@ -66,6 +66,7 @@ class Trial:
     value: Optional[float] = None       # objective over epochs_run epochs
     told_value: Optional[float] = None  # value fed to the optimizer
     error: Optional[str] = None         # traceback text (FAILED)
+    attempt: int = 0                    # bounded-retry count (transients)
     checkpoint: Any = None              # scan carry at epochs_run (jax path)
     wall_s: float = 0.0                 # evaluation wall clock spent
     #: per-epoch wall_ms history (float64), appended per committed segment;
@@ -120,4 +121,5 @@ class Trial:
             "value": self.value,
             "told_value": self.told_value,
             "error": self.error,
+            "attempt": int(self.attempt),
         }

@@ -1,0 +1,319 @@
+"""Fleet worker: one remote evaluation slot speaking the lease protocol.
+
+A worker is the execution half of the coordinator/worker control-plane
+split (Ray Tune's trial-executor shape): it owns NO study state, executes
+exactly ONE work unit at a time, and talks to the coordinator through
+three message types::
+
+    hello      {type, worker}                      on connect
+    heartbeat  {type, worker, unit, attempt}       every ``heartbeat_s``;
+                                                   ``unit`` is None while
+                                                   idle (lets the
+                                                   coordinator detect a
+                                                   lost result message)
+    result     {type, worker, unit, attempt,       when the unit finishes
+                result}                            (or times out locally)
+
+and receives::
+
+    unit       {type, unit, attempt, fn, args, timeout_s}
+    shutdown   {type}
+
+The evaluation runs on a daemon thread so the serve loop keeps
+heartbeating mid-segment — a slow epoch loop is visibly alive, a dead or
+wedged worker goes silent and its lease expires coordinator-side.  A unit
+whose evaluation exceeds its ``timeout_s`` is converted into an
+``{"error": "timeout..."}`` result locally (the hung thread is abandoned;
+the process keeps serving) so a hung objective costs one slot-timeout,
+never the study.
+
+Transports:
+
+* **process** (:func:`process_main`) — spawned by the coordinator on the
+  same box; messages over ``multiprocessing`` queues.  The worker
+  self-terminates when its parent dies, so a SIGKILLed coordinator never
+  leaks orphan evaluators.
+* **socket** (:func:`socket_main`, or ``python -m
+  repro.core.tune_service.worker --connect HOST:PORT``) — length-prefixed
+  pickle frames over TCP for workers on other hosts; the connection
+  dropping ends the worker.  (Frames are pickles: only connect workers to
+  a coordinator you trust.)
+
+Injected faults (:mod:`.faults`) are applied HERE, keyed by
+``(unit, attempt)``, because this is where real fleets break: process
+death, wedged heartbeats, lost/duplicated/late result messages, hung
+evaluations.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import select
+import socket
+import struct
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from .executor import _timed_safe
+from .faults import NO_FAULTS, FaultPlan
+
+#: heartbeat cadence (seconds) while a unit is evaluating
+DEFAULT_HEARTBEAT_S = 0.1
+
+
+def _apply_cache_env(cache_dir: Optional[str]) -> None:
+    """Point a not-yet-imported jax at the shared XLA compile cache (the
+    simulator pool's warm-start behaviour, inherited by fleet workers)."""
+    if cache_dir:
+        os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", cache_dir)
+        os.environ.setdefault(
+            "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+        os.environ.setdefault(
+            "JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
+
+
+class _Running:
+    """One in-flight evaluation: the daemon thread plus its result box.
+    Completion sets an event so the serve loop wakes instantly instead of
+    holding the finished slot for a transport-poll interval."""
+
+    def __init__(self, msg: Dict[str, Any], faults: FaultPlan):
+        self.unit = int(msg["unit"])
+        self.attempt = int(msg["attempt"])
+        self.timeout_s = msg.get("timeout_s")
+        self.t0 = time.perf_counter()
+        self._box: Dict[str, Any] = {}
+        self._event = threading.Event()
+        self._faults = faults
+        self._thread = threading.Thread(
+            target=self._run, args=(msg["fn"], msg["args"]), daemon=True,
+            name=f"repro-fleet-eval-u{self.unit}")
+        self._thread.start()
+
+    def _run(self, fn: Callable, args) -> None:
+        if self._faults.kills(self.unit, self.attempt):
+            # die mid-segment: the lease is live, heartbeats have flowed
+            time.sleep(0.05)
+            os._exit(9)
+        if self._faults.hangs(self.unit, self.attempt):
+            # a hung evaluation: heartbeats continue, the result never
+            # comes — only timeout_s can unwedge the unit
+            while True:
+                time.sleep(3600)
+        self._box["result"] = _timed_safe(fn, *args)
+        self._event.set()
+
+    def wait(self, timeout: float) -> None:
+        self._event.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def result(self) -> Dict[str, Any]:
+        return self._box["result"]
+
+    @property
+    def elapsed(self) -> float:
+        return time.perf_counter() - self.t0
+
+    @property
+    def timed_out(self) -> bool:
+        return self.timeout_s is not None and self.elapsed > self.timeout_s
+
+
+def _serve(recv: Callable[[float], Optional[Dict[str, Any]]],
+           send: Callable[[Dict[str, Any]], None],
+           worker_id: int, heartbeat_s: float, faults: FaultPlan,
+           parent_alive: Callable[[], bool]) -> None:
+    """The worker loop shared by every transport.
+
+    Idle: block on the transport (new units wake it immediately) and send
+    an *idle* heartbeat (``unit: None``) every ``heartbeat_s`` — this is
+    how the coordinator learns a result message was lost (a worker
+    claiming idle while its lease is live) and that a written-off worker
+    recovered.  Busy: wait on the evaluation's completion event (finished
+    slots are reported instantly, not at the next poll tick), heartbeat
+    the lease every ``heartbeat_s``, and poll the transport
+    non-blockingly for shutdown."""
+    send({"type": "hello", "worker": worker_id})
+    current: Optional[_Running] = None
+    wedged = False  # a fired stall fault: alive but permanently silent
+    last_hb = time.monotonic()
+    while True:
+        if not parent_alive():
+            return
+        try:
+            if current is not None:
+                delay = max(0.0, heartbeat_s
+                            - (time.monotonic() - last_hb))
+                if current.timeout_s is not None:
+                    delay = min(delay, max(
+                        0.0, current.timeout_s - current.elapsed) + 0.01)
+                current.wait(delay)
+                msg = recv(0.0)
+            else:
+                msg = recv(min(0.25, heartbeat_s))
+        except (EOFError, OSError):
+            return  # transport gone: the coordinator died or hung up
+        if msg is not None:
+            if msg.get("type") == "shutdown":
+                return
+            if msg.get("type") == "unit":
+                if current is not None and not current.done:
+                    # the coordinator never double-books a worker; a unit
+                    # arriving mid-unit means state was lost — refuse it
+                    send({"type": "result", "worker": worker_id,
+                          "unit": int(msg["unit"]),
+                          "attempt": int(msg["attempt"]),
+                          "result": {"error": "worker busy (protocol "
+                                              "violation)", "slot_s": 0.0}})
+                    continue
+                current = _Running(msg, faults)
+                continue
+        now = time.monotonic()
+        if current is None:
+            if not wedged and now - last_hb >= heartbeat_s:
+                last_hb = now
+                send({"type": "heartbeat", "worker": worker_id,
+                      "unit": None, "attempt": None})
+            continue
+        u, a = current.unit, current.attempt
+        if current.done:
+            result = current.result
+            current = None
+            last_hb = now
+            if faults.stalls(u, a):
+                # stall: the worker wedges — this result and every later
+                # message (including idle heartbeats) are suppressed, so
+                # the lease expires by heartbeat SILENCE and the worker is
+                # written off as suspect until it speaks again (never)
+                wedged = True
+                continue
+            if faults.drops(u, a):
+                # drop: pure message loss — the worker stays healthy, and
+                # its idle heartbeats let the coordinator detect the lost
+                # result quickly (the "lost" expiry fast path)
+                continue
+            delay = faults.delays(u, a)
+            if delay:
+                time.sleep(delay)  # straggler: the late twin still arrives
+            out = {"type": "result", "worker": worker_id, "unit": u,
+                   "attempt": a, "result": result}
+            send(out)
+            if faults.dups(u, a):
+                send(out)
+        elif current.timed_out:
+            t = current.timeout_s
+            current = None  # abandon the daemon thread; keep serving
+            last_hb = now
+            send({"type": "result", "worker": worker_id, "unit": u,
+                  "attempt": a,
+                  "result": {"error": f"timeout: unit {u} exceeded "
+                                      f"{t}s on worker {worker_id}",
+                             "timeout": True, "slot_s": float(t)}})
+        elif faults.stalls(u, a):
+            continue  # wedged host: no heartbeats, no result
+        elif now - last_hb >= heartbeat_s:
+            last_hb = now
+            send({"type": "heartbeat", "worker": worker_id, "unit": u,
+                  "attempt": a})
+
+
+# -- process transport (multiprocessing queues) ------------------------------
+def process_main(worker_id: int, inbox, outbox, heartbeat_s: float,
+                 faults: FaultPlan, cache_dir: Optional[str]) -> None:
+    """Entry point for coordinator-spawned process workers."""
+    _apply_cache_env(cache_dir)
+    import multiprocessing as mp
+    parent = mp.parent_process()
+
+    def recv(timeout: float):
+        try:
+            return inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def parent_alive() -> bool:
+        return parent is None or parent.is_alive()
+
+    try:
+        _serve(recv, outbox.put, worker_id, heartbeat_s, faults,
+               parent_alive)
+    finally:
+        outbox.cancel_join_thread()
+
+
+# -- socket transport (length-prefixed pickle frames) ------------------------
+def send_frame(sock: socket.socket, obj: Any) -> None:
+    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("fleet connection closed")
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock: socket.socket) -> Any:
+    """Blocking read of one frame."""
+    (n,) = struct.unpack(">I", _recv_exact(sock, 4))
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def socket_main(addr, worker_id: int,
+                heartbeat_s: float = DEFAULT_HEARTBEAT_S,
+                faults: FaultPlan = NO_FAULTS,
+                cache_dir: Optional[str] = None) -> None:
+    """Entry point for socket workers (same-box tests spawn this in a
+    process; real remote hosts use the module CLI)."""
+    _apply_cache_env(cache_dir)
+    sock = socket.create_connection(tuple(addr))
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    lock = threading.Lock()
+
+    def recv(timeout: float):
+        ready, _, _ = select.select([sock], [], [], timeout)
+        if not ready:
+            return None
+        return recv_frame(sock)  # header seen: the frame follows promptly
+
+    def send(msg: Dict[str, Any]) -> None:
+        with lock:
+            send_frame(sock, msg)
+
+    try:
+        _serve(recv, send, worker_id, heartbeat_s, faults, lambda: True)
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        description="repro tune-service fleet worker (socket transport)")
+    p.add_argument("--connect", required=True, metavar="HOST:PORT",
+                   help="coordinator address")
+    p.add_argument("--id", type=int, default=0, help="worker id")
+    p.add_argument("--heartbeat", type=float, default=DEFAULT_HEARTBEAT_S,
+                   help="heartbeat cadence in seconds")
+    args = p.parse_args(argv)
+    host, port = args.connect.rsplit(":", 1)
+    socket_main((host, int(port)), args.id, heartbeat_s=args.heartbeat)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -286,9 +286,11 @@ def test_failed_trial_is_journaled_and_skipped(tmp_path):
         return float(cfg["sampling_period"])
 
     j = str(tmp_path / "fault.jsonl")
+    # retries=0 pins the first-error-is-terminal path (the default
+    # retries=1 would absorb this one-shot transient; see the retry tests)
     r = Study(_spec(backend="numpy")).tune(
         budget=6, seed=9, n_init=3, executor="async", slots=2,
-        objective=obj, journal=j)
+        objective=obj, journal=j, retries=0)
     states = [t["state"] for t in r.trials]
     assert states.count(FAILED) == 1 and r.n_failed == 1
     assert states.count(TERMINATED) == 5
@@ -310,6 +312,144 @@ def test_default_config_failure_is_fatal():
     with pytest.raises(RuntimeError, match="default-config baseline"):
         Study(_spec(backend="numpy")).tune(
             budget=2, executor="async", objective=obj)
+
+
+def test_executor_unit_timeout():
+    # a hung unit comes back as a timeout error result; the slot pool
+    # survives and later units still run
+    ex = TrialExecutor(slots=2)
+    try:
+        def sleeper():
+            time.sleep(1.0)
+            return {"value": 1.0}
+
+        def quick():
+            return {"value": 2.0}
+
+        ex.submit(sleeper, timeout_s=0.2)
+        ex.submit(quick)
+        seq, r = ex.pop_next()
+        assert seq == 0 and r.get("timeout")
+        assert "timeout" in r["error"] and r["slot_s"] == 0.2
+        _, r2 = ex.pop_next()
+        assert r2["value"] == 2.0
+    finally:
+        ex.close()
+
+
+def test_executor_close_cancels_queued():
+    # close() must cancel queued units so an aborted study doesn't leave
+    # orphan segments burning slots
+    ran = []
+    ex = TrialExecutor(slots=1)
+
+    def unit(i):
+        ran.append(i)
+        time.sleep(0.2)
+        return {"value": i}
+
+    for i in range(3):
+        ex.submit(unit, i)
+    deadline = time.time() + 5.0
+    while not ran and time.time() < deadline:
+        time.sleep(0.005)
+    ex.close()  # unit 0 is running (close waits for it); 1 and 2 cancel
+    time.sleep(0.25)
+    assert ran == [0]
+
+
+def test_fail_n_times_markers_are_exact(tmp_path):
+    # the atomic-marker contract: exactly n callers fail, later calls
+    # succeed — the cross-process fault budget cannot over- or undershoot
+    from repro.core.tune_service import FailNTimes
+    obj = FailNTimes(str(tmp_path), n=2)
+    cfg = {"sampling_period": 7}
+    for _ in range(2):
+        with pytest.raises(RuntimeError, match="transient"):
+            obj(cfg)
+    assert obj(cfg) == 7.0
+
+
+def test_process_pool_worker_death_heals(tmp_path):
+    # a pool="process" slot SIGKILLed mid-unit poisons the shared pool;
+    # the executor rebuilds it and resubmits — results are deterministic,
+    # so the study matches a fault-free twin exactly
+    from repro.core.tune_service import KillNTimes
+    kw = dict(budget=5, seed=9, n_init=3, executor="async", slots=2,
+              pool="process")
+    clean = Study(_spec(backend="numpy")).tune(
+        objective=KillNTimes(str(tmp_path), n=0), **kw)
+    killed_dir = tmp_path / "kills"
+    killed_dir.mkdir()
+    healed = Study(_spec(backend="numpy")).tune(
+        objective=KillNTimes(str(killed_dir), n=1), **kw)
+    assert healed.n_failed == 0
+    assert healed.best_value == clean.best_value
+    assert _histories_equal(healed, clean)
+    assert len(os.listdir(killed_dir)) == 1  # the kill really fired
+
+
+# ---------------------------------------------------------------------------
+# bounded trial retry (satellite: robustness)
+# ---------------------------------------------------------------------------
+def test_transient_failure_retried_journal_twins(tmp_path):
+    # slots=1 makes the call order canonical (default, trial 0, ...), so
+    # failing exactly call 2 = trial 0's first attempt is deterministic:
+    # the default retries=1 absorbs it, and two runs journal identically
+    def make_objective():
+        calls = {"n": 0}
+
+        def obj(cfg):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("injected transient fault")
+            return float(cfg["sampling_period"])
+
+        return obj
+
+    raws, runs = [], []
+    for twin in range(2):
+        j = str(tmp_path / f"retry{twin}.jsonl")
+        r = Study(_spec(backend="numpy")).tune(
+            budget=4, seed=9, n_init=3, executor="async", slots=1,
+            objective=make_objective(), journal=j)
+        runs.append(r)
+        raws.append(open(j, "rb").read())
+    assert raws[0] == raws[1]
+    for r in runs:
+        assert r.n_failed == 0
+        assert all(t["state"] == TERMINATED for t in r.trials)
+    events = read_events(str(tmp_path / "retry0.jsonl"))
+    retries = [e for e in events if e["event"] == "retry"]
+    assert len(retries) == 1
+    assert retries[0]["trial"] == 0 and retries[0]["attempt"] == 1
+    assert "injected transient fault" in retries[0]["error"]
+    assert not any(e["event"] == "fail" for e in events)
+
+
+def test_persistent_failure_retries_then_fails(tmp_path):
+    # both the first attempt AND the bounded retry fail: the trial is
+    # journaled retry-then-fail and surrendered as FAILED
+    calls = {"n": 0}
+
+    def obj(cfg):
+        calls["n"] += 1
+        if calls["n"] in (2, 3):  # trial 0's attempt 0 and its retry
+            raise RuntimeError("injected persistent fault")
+        return float(cfg["sampling_period"])
+
+    j = str(tmp_path / "persist.jsonl")
+    r = Study(_spec(backend="numpy")).tune(
+        budget=4, seed=9, n_init=3, executor="async", slots=1,
+        objective=obj, journal=j)
+    states = [t["state"] for t in r.trials]
+    assert states.count(FAILED) == 1 and r.n_failed == 1
+    failed = next(t for t in r.trials if t["state"] == FAILED)
+    assert failed["index"] == 0
+    events = read_events(j)
+    kinds = [e["event"] for e in events]
+    assert kinds.count("retry") == 1 and kinds.count("fail") == 1
+    assert kinds.index("retry") < kinds.index("fail")
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,15 @@ Checks the structural invariants the deterministic control loop guarantees
 * per trial, committed ``eval`` epochs are strictly increasing and every
   later segment follows a ``promote`` decision;
 * a trial journals at most one terminal path (``fail`` excludes ``tell``);
-* at most one ``default`` and one ``done`` event, in their legal spots.
+* at most one ``default`` and one ``done`` event, in their legal spots;
+* (version 2) fleet lease lifecycles are well-formed per work unit:
+  ``lease`` opens at attempt 0, each ``expire`` names the unit's current
+  attempt, each ``reissue`` increments it, and deadlines are heartbeat
+  counts (wall-clock-free);
+* (version 2) ``retry`` attempts per trial count 1, 2, ... and only a
+  non-terminal trial retries;
+* **unknown event types FAIL validation** — a journal written by newer
+  code must not silently pass an older validator.
 
 Usage::
 
@@ -35,8 +43,13 @@ EVENT_FIELDS = {
     "fail": {"trial": int, "epochs": int, "error": str},
     "tell": {"trial": int, "group": int, "value": float},
     "done": {"best_trial": int, "best_value": float},
+    # version 2: bounded trial retries + fleet lease lifecycles
+    "retry": {"trial": int, "attempt": int, "epochs": int, "error": str},
+    "lease": {"unit": int, "attempt": int, "deadline": int},
+    "expire": {"unit": int, "attempt": int, "reason": str},
+    "reissue": {"unit": int, "attempt": int},
 }
-KNOWN_VERSIONS = (1,)
+KNOWN_VERSIONS = (1, 2)
 
 
 def validate_events(events):
@@ -53,6 +66,8 @@ def validate_events(events):
     epochs_seen = {}        # trial -> last committed eval epochs
     promoted = {}           # trial -> pending promote decisions
     terminal = {}           # trial -> "fail" | "tell"
+    retries = {}            # trial -> retry attempts journaled
+    lease_attempt = {}      # unit -> current lease attempt
     n_default = n_done = 0
     for i, ev in enumerate(events):
         if not isinstance(ev, dict) or "event" not in ev:
@@ -61,6 +76,7 @@ def validate_events(events):
         kind = ev["event"]
         fields = EVENT_FIELDS.get(kind)
         if fields is None:
+            # FAIL, never skip: a journal from newer code must not pass
             bad(i, f"unknown event type {kind!r}")
             continue
         for name, typ in fields.items():
@@ -96,6 +112,42 @@ def validate_events(events):
                 bad(i, f"trial {ev['trial']} asked out of order "
                        f"(expected {len(asked)})")
             asked.add(ev["trial"])
+        elif kind == "lease":
+            u = ev["unit"]
+            if u in lease_attempt:
+                bad(i, f"unit {u} leased twice")
+            elif ev["attempt"] != 0:
+                bad(i, f"unit {u} lease opens at attempt {ev['attempt']}, "
+                       f"expected 0")
+            lease_attempt[u] = 0
+        elif kind == "expire":
+            u = ev["unit"]
+            if u not in lease_attempt:
+                bad(i, f"'expire' for unit {u} with no 'lease'")
+            elif ev["attempt"] != lease_attempt[u]:
+                bad(i, f"unit {u} expired at attempt {ev['attempt']}, "
+                       f"current is {lease_attempt[u]}")
+        elif kind == "reissue":
+            u = ev["unit"]
+            if u not in lease_attempt:
+                bad(i, f"'reissue' for unit {u} with no 'lease'")
+            elif ev["attempt"] != lease_attempt[u] + 1:
+                bad(i, f"unit {u} reissued as attempt {ev['attempt']}, "
+                       f"expected {lease_attempt[u] + 1}")
+            else:
+                lease_attempt[u] = ev["attempt"]
+        elif kind == "retry":
+            t = ev["trial"]
+            if t not in asked:
+                bad(i, f"'retry' for trial {t} before its 'ask'")
+            elif t in terminal:
+                bad(i, f"'retry' for trial {t} after terminal "
+                       f"{terminal[t]!r}")
+            elif ev["attempt"] != retries.get(t, 0) + 1:
+                bad(i, f"trial {t} retry attempt {ev['attempt']}, "
+                       f"expected {retries.get(t, 0) + 1}")
+            else:
+                retries[t] = ev["attempt"]
         else:  # eval / rung / fail / tell
             t = ev["trial"]
             if t not in asked:
