@@ -79,6 +79,30 @@ Receipts (injected 1-in-8 worker kills, utilization, re-issue overhead):
 ``python -m benchmarks.study_fleet`` -> ``BENCH_study.json["fleet"]``;
 fault injectors for tests live in ``repro.core.tune_service.faults``.
 
+**Online re-tuning under drift** (PR 9): ``--drift`` swaps the workload
+for a registered phase-shifting trace (:mod:`repro.core.drift`) and
+``--online`` runs the sliding-window online tuner instead of a one-shot
+search: every ``--window`` epochs ONE compiled CRN segment evaluates the
+deployed config (row 0 — the system's actual trajectory) next to
+``--batch-size`` SMAC candidates as paired what-if-we-switched
+counterfactuals; a detected phase change (sampled-histogram divergence or
+surrogate-residual blowup) warm-restarts the optimizer from the prior
+elites, and switches apply only past a hysteresis margin + dwell period,
+so the config can never thrash.  Worked hotspot-rotation example (the hot
+set moves every 20 epochs; watch the tuner detect each rotation and
+re-adapt)::
+
+    PYTHONPATH=src python examples/quickstart.py --backend jax --crn \\
+        --drift drift-hotspot --online --window 10 --batch-size 6 \\
+        --budget 36
+
+``--drift drift-splice`` replays a gups -> silo/ycsb-c wholesale change
+instead, and custom drifts are one-liners (``DriftSpec.splice(...)``,
+``.hotspot(...)``, ``.wset(...)`` — ``spec.register()`` makes them plain
+workload names).  Receipts (time-to-readapt, cumulative slowdown vs the
+default and per-phase-oracle arms, zero-thrash assertion):
+``python -m benchmarks.drift`` -> ``BENCH_drift.json``.
+
 The optimizer itself runs its compiled hot path by default (PR 5): the
 random-forest surrogate is grown level-synchronously into flat arrays and
 EI acquisition is one fused vectorized pass (jitted on TPU hosts) ending in
@@ -132,17 +156,48 @@ def main():
                     help="JSON-lines study journal path (--executor async)")
     ap.add_argument("--resume", action="store_true",
                     help="resume a killed study from --journal")
+    ap.add_argument("--drift", default=None,
+                    help="phase-shifting workload name (drift-hotspot, "
+                         "drift-wset, drift-splice, or a registered "
+                         "DriftSpec); overrides --workload")
+    ap.add_argument("--online", action="store_true",
+                    help="sliding-window online re-tuning (requires "
+                         "--backend jax --crn; see repro.core.tune_online)")
+    ap.add_argument("--window", type=int, default=10,
+                    help="online re-tuning window length in epochs")
     args = ap.parse_args()
     workers = args.workers if args.workers == "auto" else int(args.workers)
 
+    workload = WorkloadSpec(args.drift, scale=0.05) if args.drift \
+        else WorkloadSpec(args.workload, args.input)
     spec = ExperimentSpec(
         engine="hemem",
-        workload=WorkloadSpec(args.workload, args.input),
+        workload=workload,
         machine=args.machine,
         options=SimOptions(sampler="sparse" if args.batch_size > 1
                            else "elementwise", workers=workers,
                            backend=args.backend, crn=args.crn))
     study = Study(spec)
+    if args.online:
+        print(f"Online re-tuning of HeMem for {study.key} "
+              f"(window {args.window} epochs, q={args.batch_size}, "
+              f"budget {args.budget})...")
+        print(f"spec: {json.dumps(spec.to_dict())}\n")
+        res = study.tune(online=True, window_epochs=args.window,
+                         batch_size=args.batch_size, budget=args.budget,
+                         seed=0, journal=args.journal, resume=args.resume,
+                         verbose=True)
+        print(f"\ndeployed cumulative wall: {res.total_wall_ms:12.1f} ms "
+              f"over {len(res.windows)} windows")
+        print(f"switches: {res.switches} (windows {res.switch_windows}) | "
+              f"detections: {res.detections} | guard-blocked: "
+              f"{res.guard_blocks} | thrash: {res.thrash_events}")
+        print("final config (changes vs default):")
+        dflt = HEMEM_SPACE.default_config()
+        for k, v in res.final_config.items():
+            if v != dflt[k]:
+                print(f"  {k:28s} {dflt[k]:>8} -> {v}")
+        return
     if args.executor == "fleet":
         mode = f"fleet workers={args.fleet_workers}"
     elif args.executor == "async":

@@ -15,6 +15,7 @@ as deprecated shims with identical numerics; see the migration table in the
 :mod:`repro.core.study` docstring.
 """
 
+from .drift import DriftPhase, DriftSpec  # noqa: F401  (registers drift-*)
 from .registry import (BACKENDS, ENGINES, MACHINES, SAMPLERS, WORKLOADS,
                        Registry, register_backend, register_engine,
                        register_machine, register_sampler, register_workload)
@@ -26,6 +27,7 @@ __all__ = [
     "BACKENDS", "ENGINES", "MACHINES", "SAMPLERS", "WORKLOADS", "Registry",
     "register_backend", "register_engine", "register_machine",
     "register_sampler", "register_workload",
+    "DriftPhase", "DriftSpec",
     "EngineSpec", "ExperimentSpec", "SimOptions", "WorkloadSpec",
     "Study", "SweepResult",
 ]

@@ -93,13 +93,22 @@ class SMACOptimizer:
                  n_candidates: int = 512, n_local_parents: int = 4,
                  n_trees: int = 24, start_with_default: bool = True,
                  surrogate: Optional[str] = None,
-                 acquisition: Optional[str] = None):
+                 acquisition: Optional[str] = None,
+                 seed_configs: Optional[List[Config]] = None):
         """``surrogate`` picks the forest builder (``"reference"|"fast"``;
         None resolves via :data:`repro.core.bo.rf.FORCE`, default fast —
         both produce bit-identical forests and thus identical suggestion
         histories).  ``acquisition`` picks the scoring pipeline
         (``"fused"`` default; ``"legacy"`` is the pre-PR-5 pipeline kept
-        for the overhead benchmark and oracle tests)."""
+        for the overhead benchmark and oracle tests).
+
+        ``seed_configs`` warm-starts the optimizer: the given configs are
+        suggested FIRST (before the default config and the random initial
+        design), in order.  This is the online tuner's warm-restart hook —
+        after a detected workload phase change it re-opens a fresh
+        optimizer seeded with the prior forest's elites, so the new phase's
+        surrogate is fit on re-evaluations of previously good configs
+        instead of starting blind."""
         if acquisition not in (None, "fused", "legacy"):
             raise ValueError(f"unknown acquisition {acquisition!r}; "
                              "expected 'fused' or 'legacy'")
@@ -119,6 +128,8 @@ class SMACOptimizer:
         self.acquisition = acquisition or "fused"
         self.observations: List[Observation] = []
         self._surrogate: Optional[RandomForest] = None
+        self._seed_queue: List[Config] = [space.validate(c) for c
+                                          in (seed_configs or [])]
         #: cumulative surrogate-fit wall clock (the tuner's per-round
         #: fit/acquisition breakdown reads deltas of this)
         self.fit_s = 0.0
@@ -189,6 +200,8 @@ class SMACOptimizer:
 
     # -- suggestion -----------------------------------------------------------
     def ask(self) -> Config:
+        if self._seed_queue:  # warm-restart elites go out first
+            return dict(self._seed_queue.pop(0))
         n_seen = len(self.observations)
         if n_seen == 0 and self.start_with_default:
             return self.space.default_config()  # paper: start from default
@@ -277,6 +290,12 @@ class SMACOptimizer:
         """
         if q < 1:
             raise ValueError("q must be >= 1")
+        if self._seed_queue:  # warm-restart elites fill the head slots
+            head = [dict(self._seed_queue.pop(0))
+                    for _ in range(min(q, len(self._seed_queue)))]
+            return head if len(head) == q \
+                else head + self.ask_batch(q - len(head),
+                                           include_incumbent=False)
         if include_incumbent and q > 1 and \
                 len(self.observations) >= self.n_init:
             rest = self.ask_batch(q - 1)

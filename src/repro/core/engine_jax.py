@@ -994,6 +994,30 @@ def carry_to_host(carry):
     return jax.tree_util.tree_map(np.asarray, carry)
 
 
+def broadcast_carry_row(carry, row: int, B: int):
+    """Broadcast ONE batch row of a host carry to a fresh ``B``-row carry.
+
+    The online tuner's counterfactual hook: the deployed system's state at
+    epoch ``t`` (row ``row``) becomes the shared starting state for a
+    candidate batch evaluating "what if we switched configs now" over the
+    next window.  The shared first-touch ``allocated`` vector has no batch
+    axis and passes through.
+
+    Only meaningful under CRN (``SimOptions(crn=True)``), where every row's
+    base key is identical — broadcasting row ``row``'s key then changes no
+    draw.  Without CRN the copied per-row keys would collapse the rows onto
+    one noise stream, so callers must pass ``crn=True`` downstream.
+    """
+    in_fast, allocated, est, eng, cum, keys = carry
+
+    def pick(a):
+        a = np.asarray(a)
+        return np.repeat(a[row:row + 1], B, axis=0)
+
+    return (pick(in_fast), np.asarray(allocated), pick(est),
+            jax.tree_util.tree_map(pick, eng), pick(cum), pick(keys))
+
+
 def _build_run_fn(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
                   page_bytes, record_placement, select_mode="ref"):
     """Compiled scan driver over ``n_epochs`` epochs (the SEGMENT length).
@@ -1019,6 +1043,24 @@ def _build_run_fn(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
 #: satellite: same prefix + same remaining shape params == no retrace.
 _COMPILED: Dict[Tuple, Tuple[Any, Any]] = {}
 
+#: shape-parameter names aligned with _get_compiled's key[3:] — used to
+#: name the fields a recompile changed
+_KEY_FIELDS = ("B", "n_epochs", "fast_cap", "scale", "page_bytes",
+               "record_placement", "pmapped", "select_mode")
+
+#: recompile causes already warned about, keyed ((engine, n, sampler),
+#: changed-field names).  A phase-shifting study that alternates between
+#: two shapes (e.g. window evaluations on two drift phases) retraces each
+#: shape ONCE (the compiled functions are cached and reused when the shape
+#: repeats) but used to WARN on every first-sighting of a shape; warning
+#: once per cause keeps logs readable across phase switches.
+_RECOMPILE_WARNED: "set[Tuple]" = set()
+
+
+def reset_recompile_warnings() -> None:
+    """Forget which recompile causes have warned (tests)."""
+    _RECOMPILE_WARNED.clear()
+
 
 def _n_devices() -> int:
     """Local XLA device count (1 unless the host is split, e.g. via
@@ -1039,18 +1081,36 @@ def _get_compiled(engine_name, B, n, n_epochs, fast_cap, sampler, scale,
     if hit is not None:
         return hit
     prefix = key[:3]
-    if any(k[:3] == prefix for k in _COMPILED):
-        if any(k[:4] == key[:4] and k[5:] == key[5:] for k in _COMPILED):
+    same_prefix = [k for k in _COMPILED if k[:3] == prefix]
+    if same_prefix:
+        # name the shape fields this recompile changed, against the
+        # closest already-compiled shape (fewest differing fields)
+        def _diff(k):
+            return tuple(name for name, a, b
+                         in zip(_KEY_FIELDS, k[3:], key[3:]) if a != b)
+
+        changed = min((_diff(k) for k in same_prefix), key=len)
+        if changed == ("n_epochs",):
             # only the segment LENGTH differs — routine for the tune
             # service's partial-epoch (ASHA rung) evaluations, not churn
             log.debug("compiling %d-epoch segment driver for %s "
                       "(n_pages=%d, B=%d)", n_epochs, engine_name, n, B)
         else:
-            log.warning(
-                "recompiling jax epoch loop for %s (n_pages=%d, sampler=%s): "
-                "batch/epoch shape or selection changed to B=%d, E=%d, "
-                "fast_cap=%d, select=%s",
-                engine_name, n, sampler, B, n_epochs, fast_cap, select_mode)
+            # warn once per CAUSE (prefix + changed-field set), not once
+            # per switch: a drift study alternating between two phase
+            # shapes logs one warning, then debug lines
+            cause = (prefix, changed)
+            msg = ("recompiling jax epoch loop for %s (n_pages=%d, "
+                   "sampler=%s): %s changed to B=%d, E=%d, fast_cap=%d, "
+                   "select=%s")
+            fields = ("/".join(changed) or "shape", B, n_epochs, fast_cap,
+                      select_mode)
+            if cause in _RECOMPILE_WARNED:
+                log.debug(msg + " (repeat cause)", engine_name, n, sampler,
+                          *fields)
+            else:
+                _RECOMPILE_WARNED.add(cause)
+                log.warning(msg, engine_name, n, sampler, *fields)
     if pmapped:
         # data-parallel over local XLA devices: each device runs the scan on
         # a B/ndev slice of the batch.  Per-row draws are keyed by global

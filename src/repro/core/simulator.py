@@ -837,8 +837,13 @@ def run_simulation_segment(workload: Workload, engine_name: str,
             seeds, sampler, crn=crn, batch_offset=batch_offset,
             exact_select=exact_select, epoch_start=epoch_start,
             epoch_stop=epoch_stop, carry=carry, return_carry=return_carry)
+        # the materialized segment trace rides along (compiled path only):
+        # the online tuner's sampled-histogram drift detector consumes it
+        # without regenerating the procedural workload epochs
         return {"wall_ms": np.asarray(out["wall_ms"], dtype=np.float64),
-                "carry": out.get("carry")}
+                "carry": out.get("carry"),
+                "trace_reads": out.get("trace_reads"),
+                "trace_writes": out.get("trace_writes")}
     if crn:
         raise ValueError(
             "crn=True requires the compiled jax path; see run_simulation_batch")

@@ -120,6 +120,12 @@ class WorkloadSpec:
             return value
         if isinstance(value, str):
             return cls(value)
+        # a DriftSpec (phase-shifting trace) coerces by registering its
+        # composed workload: Study(ExperimentSpec(workload=DriftSpec(...)))
+        # just works.  Lazy import — drift.py imports this module.
+        from .drift import DriftSpec
+        if isinstance(value, DriftSpec):
+            return cls(value.register())
         return cls.from_dict(value)
 
 

@@ -161,7 +161,11 @@ class Study:
              faults: Optional[Any] = None,
              heartbeat_s: Optional[float] = None,
              lease_deadline: Optional[int] = None,
-             max_respawns: Optional[int] = None) -> TuningResult:
+             max_respawns: Optional[int] = None,
+             online: bool = False,
+             window_epochs: Optional[int] = None,
+             hysteresis: float = 0.05,
+             dwell_windows: int = 2) -> TuningResult:
         """SMAC-BO tuning of the spec's engine knobs (§3.1).
 
         ``seed`` seeds the optimizer; the simulation seed stays
@@ -287,7 +291,63 @@ class Study:
           faults (kill/stall/hang/drop/dup/delay, keyed by unit +
           attempt) for robustness testing; see
           :mod:`repro.core.tune_service.faults`.
+
+        **Online re-tuning under drift** (``online=True,
+        window_epochs=W``).  For phase-shifting workloads
+        (:class:`~repro.core.drift.DriftSpec`) the study becomes a
+        sliding-window control loop (:mod:`repro.core.tune_online`)
+        instead of a one-shot search.  The contract:
+
+        * *window*: every ``window_epochs`` epochs, ONE compiled CRN
+          segment evaluates ``[deployed] + batch_size`` candidates from
+          the deployed system's checkpoint — row 0 is the system's
+          actual trajectory, the rest are paired what-if-we-switched
+          counterfactuals.  ``budget`` caps total candidate evaluations.
+        * *warm restart*: a detected phase change (sampled-histogram
+          divergence or surrogate-residual blowup) REPLACES the
+          optimizer with a fresh one seeded with the prior elites
+          (``SMACOptimizer(seed_configs=...)``), so re-tuning starts
+          from previously good configs, not from scratch — and stale
+          observations cannot mislead the new phase's forest.
+        * *hysteresis*: a config switch is applied only when the best
+          candidate beats the deployed config by more than
+          ``hysteresis`` (relative margin) AND ``dwell_windows`` windows
+          have passed since the last switch — config thrashing is
+          structurally impossible, not just unlikely.
+
+        Requires ``SimOptions(backend='jax', crn=True)`` and
+        ``executor='sync'``; ``journal=``/``resume=`` give the same
+        byte-identical kill/resume contract as async studies.  Returns
+        an :class:`~repro.core.tune_online.OnlineTuningResult` (window
+        timeline + switch/detection/thrash receipts);
+        ``benchmarks/drift.py`` turns those into the BENCH_drift.json
+        time-to-readapt and cumulative-slowdown receipts.
         """
+        if online:
+            from .tune_online import OnlineTuner
+            if executor != "sync":
+                raise ValueError(
+                    "online=True runs its own window loop; it is "
+                    "incompatible with executor='async'/'fleet'")
+            if window_epochs is None:
+                raise ValueError(
+                    "online=True requires window_epochs=W (the re-tuning "
+                    "window length in epochs)")
+            if scheduler is not None or objective is not None \
+                    or objective_batch is not None:
+                raise ValueError(
+                    "online=True is incompatible with scheduler=/"
+                    "objective=: the window loop needs the simulator's "
+                    "segment checkpoints")
+            tuner = OnlineTuner(
+                self, window_epochs=window_epochs, batch_size=batch_size,
+                budget=budget, seed=seed, n_init=n_init,
+                hysteresis=hysteresis, dwell_windows=dwell_windows,
+                space=space, journal=journal, resume=resume,
+                verbose=verbose)
+            return tuner.run()
+        if window_epochs is not None:
+            raise ValueError("window_epochs requires online=True")
         if executor in ("async", "fleet"):
             from .tune_service import TuneService
             if batch_size != 1 or objective_batch is not None:

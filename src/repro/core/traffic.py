@@ -83,15 +83,54 @@ class TrafficSpec:
     burst_factor: float = 6.0      # burst rate multiplier
 
     def __post_init__(self):
+        # validate at CONSTRUCTION, not at trace time: a bad spec used to
+        # survive until arrival_trace silently clamped it (negative rates
+        # -> np.maximum(lam, 0) -> an all-zero trace that looked like a
+        # measurement, not a typo).  Same convention as KnobSpace/DriftSpec.
         if self.pattern not in PATTERNS:
             raise ValueError(f"unknown traffic pattern {self.pattern!r}; "
                              f"expected one of {PATTERNS}")
+        if self.arrival_rate < 0:
+            raise ValueError(f"arrival_rate must be >= 0, "
+                             f"got {self.arrival_rate}")
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.decode_lo < 1:
+            raise ValueError(f"decode_lo must be >= 1, "
+                             f"got {self.decode_lo}")
+        if self.decode_lo > self.decode_hi:
+            raise ValueError(
+                f"decode_lo must be <= decode_hi, got "
+                f"decode_lo={self.decode_lo} > decode_hi={self.decode_hi}")
+        if self.period < 1:
+            raise ValueError(f"period must be >= 1, got {self.period}")
+        if not 0.0 <= self.amplitude <= 1.0:
+            raise ValueError(
+                f"amplitude must be in [0, 1] (modulation depth; >1 would "
+                f"drive the diurnal rate negative), got {self.amplitude}")
+        if not 0.0 <= self.burst_prob <= 1.0:
+            raise ValueError(f"burst_prob must be a probability in [0, 1], "
+                             f"got {self.burst_prob}")
+        if self.burst_factor < 0:
+            raise ValueError(f"burst_factor must be >= 0, "
+                             f"got {self.burst_factor}")
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "TrafficSpec":
+        known = [f.name for f in dataclasses.fields(TrafficSpec)]
+        unknown = sorted(set(d) - set(known))
+        if unknown:
+            import difflib
+            hints = []
+            for k in unknown:
+                close = difflib.get_close_matches(k, known, n=1, cutoff=0.5)
+                hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise KeyError(f"unknown TrafficSpec keys: {', '.join(hints)} "
+                           f"(known: {', '.join(known)})")
         return TrafficSpec(**d)
 
 

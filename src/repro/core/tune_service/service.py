@@ -202,6 +202,19 @@ class TuneService:
                              f"one of {EXECUTORS}")
         if executor == "fleet":
             from .coordinator import FLEET_POOLS
+            if scheduler is not None:
+                # ROADMAP 3a: fleet leases dispatch full-epoch units only —
+                # a rung's partial-epoch carry never travels to a remote
+                # worker, so ASHA under the fleet would silently run every
+                # trial to full budget (no early stopping at all).  Refuse
+                # rather than no-op.
+                raise NotImplementedError(
+                    f"executor='fleet' does not support "
+                    f"scheduler={scheduler!r}: fleet work units are "
+                    f"full-epoch only (rung carries do not travel across "
+                    f"the lease protocol yet — ROADMAP item 3a); use "
+                    f"executor='async' for ASHA early stopping, or drop "
+                    f"the scheduler")
             if workers is not None:
                 slots = int(workers)
             if pool not in FLEET_POOLS:

@@ -314,6 +314,50 @@ def _xsbench(input_name: str, threads: int, scale: float, seed: int) -> Workload
                     epoch_access=epoch_access, seed=seed)
 
 
+@register_workload("wset", default_input="f50")
+def _wset(input_name: str, threads: int, scale: float, seed: int) -> Workload:
+    """Parameterizable working-set workload (the drift zoo's growth/shrink
+    base): input ``f<percent>`` sets the touched fraction of the address
+    space (``f25`` = the first 25 % of pages are active).
+
+    The active region is a PREFIX of the page range, so two builds at
+    different fractions are strict sub/supersets of each other — exactly
+    the semantics working-set growth needs (``DriftSpec.wset`` splices
+    ``f25 -> f50 -> f100`` phases): when the set grows, the new pages are
+    cold-start demand the tiering engine must notice and promote.  Per-page
+    weights within the active set carry a mild lognormal skew drawn once
+    over the FULL page range (seed-deterministic), so every fraction sees
+    the same per-page weights on the shared prefix.
+    """
+    rss = 32.0
+    n = _pages_for(rss, scale)
+    n_epochs = 60
+    epoch_ms = 500.0
+    if not (len(input_name) > 1 and input_name[0] == "f"):
+        raise ValueError(f"wset input must be 'f<percent>' (e.g. 'f25'), "
+                         f"got {input_name!r}")
+    frac = float(input_name[1:]) / 100.0
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"wset fraction must be in (0, 100], "
+                         f"got {input_name!r}")
+    rng = np.random.default_rng(seed + 53)
+    A = threads * BASE_RATE_PER_THREAD * (epoch_ms / 1e3) * scale
+    n_act = max(8, int(round(n * frac)))
+    # one weight draw for the whole range; fractions share the prefix
+    v = np.exp(rng.normal(0.0, 0.4, size=n))
+    w = np.full(n, 0.05 / n)
+    w[:n_act] += 0.95 * v[:n_act] / v[:n_act].sum()
+    w = _norm(w)
+
+    def epoch_access(e: int):
+        acc = A * w
+        return 0.90 * acc, 0.10 * acc
+
+    return Workload("wset", input_name, rss, n, n_epochs, epoch_ms, threads,
+                    mlp=7.0, compute_ms=80.0, scale=scale,
+                    epoch_access=epoch_access, seed=seed)
+
+
 @register_workload("graph500", default_input="kron")
 def _graph500(input_name: str, threads: int, scale: float, seed: int) -> Workload:
     rss = 34.13

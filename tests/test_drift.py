@@ -1,0 +1,342 @@
+"""Phase-shifting workloads: spec validation, determinism, backend parity
+across phase boundaries, segmentation at switch epochs, jit-cache hygiene,
+and the TrafficSpec construction-time validation that rides along.
+
+The contracts pinned here (see ``repro.core.drift``):
+
+* a ``DriftSpec`` validates at CONSTRUCTION (bad switch epochs, phase
+  count mismatches, unknown JSON keys with did-you-mean hints) — the
+  KnobSpace convention, not a silent mid-study trace anomaly;
+* the composed trace is deterministic in ``(spec, seed)`` and registers
+  as an ordinary picklable workload;
+* the backend-parity contract holds across phase boundaries unchanged:
+  deterministic engines plan bitwise-identical migrations on both
+  backends, and jax segments stopping/resuming exactly at a phase switch
+  are bitwise identical to an unsegmented drifting run;
+* recompile warnings fire once per CAUSE, not once per phase switch, and
+  compiled segments are reused when shapes repeat across phases.
+"""
+
+import dataclasses
+import json
+import logging
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import ExperimentSpec, SimOptions, Study, WorkloadSpec
+from repro.core.drift import (BUILTIN_DRIFTS, DriftPhase, DriftSpec,
+                              build_drift_workload, histogram_divergence,
+                              window_histogram)
+from repro.core.registry import WORKLOADS
+from repro.core.simulator import run_simulation_batch, run_simulation_segment
+from repro.core.traffic import TrafficSpec
+from repro.core.workloads import make_workload
+
+
+# ---------------------------------------------------------------------------
+# spec validation (construction-time, KnobSpace convention)
+# ---------------------------------------------------------------------------
+
+def test_drift_spec_needs_two_phases():
+    with pytest.raises(ValueError, match="at least 2 phases"):
+        DriftSpec(phases=(DriftPhase("gups"),), switch_epochs=(),
+                  n_epochs=40)
+
+
+def test_drift_spec_switch_count_mismatch():
+    with pytest.raises(ValueError, match="one switch epoch per phase"):
+        DriftSpec(phases=(DriftPhase("gups"), DriftPhase("btree")),
+                  switch_epochs=(10, 20), n_epochs=40)
+
+
+@pytest.mark.parametrize("switches", [(0,), (40,), (45,), (-3,)])
+def test_drift_spec_switch_out_of_range(switches):
+    with pytest.raises(ValueError, match="strictly increasing inside"):
+        DriftSpec(phases=(DriftPhase("gups"), DriftPhase("btree")),
+                  switch_epochs=switches, n_epochs=40)
+
+
+def test_drift_spec_switches_must_increase():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        DriftSpec(phases=tuple(DriftPhase("gups") for _ in range(3)),
+                  switch_epochs=(20, 10), n_epochs=40)
+
+
+def test_drift_spec_unknown_key_did_you_mean():
+    d = DriftSpec.hotspot().to_dict()
+    d["switch_epoch"] = d.pop("switch_epochs")
+    with pytest.raises(KeyError, match="did you mean 'switch_epochs'"):
+        DriftSpec.from_dict(d)
+
+
+def test_drift_phase_unknown_key_did_you_mean():
+    with pytest.raises(KeyError, match="did you mean 'seed_offset'"):
+        DriftPhase.from_dict({"workload": {"name": "gups"},
+                              "seed_offst": 1})
+
+
+def test_drift_phase_negative_seed_offset():
+    with pytest.raises(ValueError, match="seed_offset"):
+        DriftPhase("gups", seed_offset=-1)
+
+
+def test_drift_phase_name_input_shorthand():
+    p = DriftPhase.coerce("silo:ycsb-c")
+    assert p.workload.name == "silo" and p.workload.input_name == "ycsb-c"
+
+
+def test_hotspot_needs_two_phases():
+    with pytest.raises(ValueError, match="n_phases >= 2"):
+        DriftSpec.hotspot(n_phases=1)
+
+
+# ---------------------------------------------------------------------------
+# JSON round trip + registration
+# ---------------------------------------------------------------------------
+
+def test_drift_spec_json_round_trip():
+    spec = DriftSpec.splice("gups", "silo:ycsb-c", switch_epoch=30,
+                            n_epochs=60)
+    twin = DriftSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert twin == spec
+    assert twin.name == spec.name  # digest-stable
+
+
+def test_drift_spec_digest_name_content_addressed():
+    a = DriftSpec.hotspot(n_phases=2, phase_epochs=10)
+    b = DriftSpec.hotspot(n_phases=2, phase_epochs=10)
+    c = DriftSpec.hotspot(n_phases=2, phase_epochs=12)
+    assert a.name == b.name and a.name != c.name
+
+
+def test_register_makes_plain_workload_name():
+    spec = DriftSpec.hotspot(n_phases=2, phase_epochs=5)
+    name = spec.register()
+    wl = make_workload(name, "", threads=4, scale=0.03, seed=1)
+    assert wl.n_epochs == spec.n_epochs
+    # the builder is picklable (shard workers rebuild from the spec)
+    builder = WORKLOADS.get(name)
+    assert pickle.loads(pickle.dumps(builder)) is not None
+
+
+def test_drift_spec_coerces_through_experiment_spec():
+    spec = DriftSpec.hotspot(n_phases=2, phase_epochs=5)
+    exp = ExperimentSpec(engine="static", workload=spec)
+    assert exp.workload.name == spec.name
+    assert exp.workload.name in WORKLOADS.names()
+
+
+def test_phase_of():
+    spec = BUILTIN_DRIFTS["drift-hotspot"]
+    assert spec.phase_starts == (0, 20, 40)
+    assert spec.phase_of(0) == 0
+    assert spec.phase_of(19) == 0
+    assert spec.phase_of(20) == 1
+    assert spec.phase_of(59) == 2
+    with pytest.raises(ValueError):
+        spec.phase_of(60)
+
+
+# ---------------------------------------------------------------------------
+# composed trace semantics
+# ---------------------------------------------------------------------------
+
+def test_drift_trace_deterministic_in_spec_and_seed():
+    spec = BUILTIN_DRIFTS["drift-splice"]
+    a = build_drift_workload(spec, threads=4, scale=0.03, seed=7)
+    b = build_drift_workload(spec, threads=4, scale=0.03, seed=7)
+    c = build_drift_workload(spec, threads=4, scale=0.03, seed=8)
+    for e in (0, 29, 30, 59):
+        ra, wa = a.epoch_access(e)
+        rb, wb = b.epoch_access(e)
+        assert np.array_equal(ra, rb) and np.array_equal(wa, wb)
+    rc, _ = c.epoch_access(0)
+    assert not np.array_equal(a.epoch_access(0)[0], rc)
+
+
+def test_drift_trace_changes_exactly_at_switch():
+    spec = BUILTIN_DRIFTS["drift-hotspot"]
+    wl = build_drift_workload(spec, threads=4, scale=0.03, seed=3)
+    # within a phase the base trace replays: epochs 0 and 20 are the
+    # local epoch-0 of DIFFERENT seeds, so they differ; 20 vs 40 too
+    r0 = wl.epoch_access(0)[0]
+    r20 = wl.epoch_access(20)[0]
+    r40 = wl.epoch_access(40)[0]
+    assert not np.array_equal(r0, r20)
+    assert not np.array_equal(r20, r40)
+
+
+def test_drift_pads_shorter_phase_to_max_pages():
+    spec = DriftSpec.splice("gups", "silo:ycsb-c", switch_epoch=5,
+                            n_epochs=10)
+    wl = build_drift_workload(spec, threads=4, scale=0.03, seed=0)
+    parts = [make_workload(p.workload.name, p.workload.input_name,
+                           threads=4, scale=0.03, seed=0)
+             for p in spec.phases]
+    assert wl.n_pages == max(p.n_pages for p in parts)
+    for e in (0, 9):
+        r, w = wl.epoch_access(e)
+        assert r.shape == (wl.n_pages,) and w.shape == (wl.n_pages,)
+
+
+def test_window_histogram_divergence_detects_phases():
+    spec = BUILTIN_DRIFTS["drift-hotspot"]
+    wl = build_drift_workload(spec, threads=4, scale=0.03, seed=3)
+    h0 = window_histogram(wl, 0, 10)
+    h1 = window_histogram(wl, 10, 20)   # same phase
+    h2 = window_histogram(wl, 20, 30)   # next phase
+    assert histogram_divergence(h0, h1) == 0.0  # procedural replay
+    assert histogram_divergence(h1, h2) > 0.25  # detector threshold margin
+
+
+# ---------------------------------------------------------------------------
+# wset workload (working-set growth primitive)
+# ---------------------------------------------------------------------------
+
+def test_wset_workload_fraction_inputs():
+    small = make_workload("wset", "f25", threads=4, scale=0.05, seed=0)
+    big = make_workload("wset", "f100", threads=4, scale=0.05, seed=0)
+    assert small.n_pages == big.n_pages
+    r_s = small.epoch_access(0)[0]
+    r_b = big.epoch_access(0)[0]
+    # the touched set is a prefix: growth makes it a strict superset
+    n_s = (r_s > r_s.min()).sum()
+    n_b = (r_b > r_b.min()).sum()
+    assert n_s < n_b
+
+
+@pytest.mark.parametrize("inp", ["25", "f0", "f101", "fxx"])
+def test_wset_rejects_bad_inputs(inp):
+    with pytest.raises(ValueError):
+        make_workload("wset", inp, threads=4, scale=0.05, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# TrafficSpec: construction-time validation (was a silent clamp)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(arrival_rate=-1.0), "arrival_rate"),
+    (dict(steps=0), "steps"),
+    (dict(decode_lo=0), "decode_lo"),
+    (dict(decode_lo=96, decode_hi=32), "decode_lo must be <= decode_hi"),
+    (dict(period=0), "period"),
+    (dict(amplitude=1.5), "amplitude"),
+    (dict(burst_prob=1.5), "burst_prob"),
+    (dict(burst_factor=-1.0), "burst_factor"),
+])
+def test_traffic_spec_validates_at_construction(kw, match):
+    with pytest.raises(ValueError, match=match):
+        TrafficSpec(**kw)
+
+
+def test_traffic_spec_from_json_did_you_mean():
+    with pytest.raises(KeyError, match="did you mean 'arrival_rate'"):
+        TrafficSpec.from_json({"arrival_rte": 2.0})
+
+
+def test_traffic_spec_round_trip_still_works():
+    spec = TrafficSpec(pattern="bursty-diurnal", arrival_rate=2.0)
+    assert TrafficSpec.from_json(spec.to_json()) == spec
+
+
+# ---------------------------------------------------------------------------
+# backend parity + segmentation across phase boundaries (compiled path)
+# ---------------------------------------------------------------------------
+
+jax_mod = pytest.importorskip("jax")
+
+from repro.core import engine_jax  # noqa: E402
+from repro.core.knobs import get_space  # noqa: E402
+
+
+def _drift_wl(name="drift-splice", scale=0.03, seed=3):
+    return make_workload(name, "", threads=8, scale=scale, seed=seed)
+
+
+@pytest.mark.parametrize("engine", ["static", "oracle"])
+def test_numpy_jax_parity_bitwise_on_drift(engine):
+    """Deterministic engines: bitwise-identical migrations across ALL
+    phase boundaries of a drifting trace, numpy vs compiled."""
+    wl = _drift_wl()
+    cfgs = [{}]
+    a = run_simulation_batch(wl, engine, cfgs, seeds=0, sampler="sparse",
+                             backend="numpy")[0]
+    b = run_simulation_batch(wl, engine, cfgs, seeds=0, sampler="sparse",
+                             backend="jax")[0]
+    assert np.array_equal(a.cum_migrations, b.cum_migrations)
+    np.testing.assert_allclose(a.total_s, b.total_s, rtol=1e-4)
+
+
+def test_segment_split_at_phase_switch_bitwise_jax():
+    """Stopping/resuming EXACTLY at the phase-switch epoch is invisible:
+    per-epoch walls bitwise equal to the unsegmented drifting run."""
+    wl = _drift_wl()          # switch at epoch 30
+    space = get_space("hemem")
+    cfgs = [space.default_config(),
+            space.sample(np.random.default_rng(5))]
+    full = run_simulation_segment(wl, "hemem", cfgs, seeds=0,
+                                  sampler="sparse", backend="jax")
+    first = run_simulation_segment(wl, "hemem", cfgs, seeds=0,
+                                   sampler="sparse", backend="jax",
+                                   epoch_stop=30, return_carry=True)
+    second = run_simulation_segment(wl, "hemem", cfgs, seeds=0,
+                                    sampler="sparse", backend="jax",
+                                    epoch_start=30, carry=first["carry"])
+    stitched = np.concatenate([first["wall_ms"], second["wall_ms"]], axis=0)
+    assert np.array_equal(stitched, full["wall_ms"])
+
+
+def test_segment_prefix_at_phase_switch_numpy():
+    """numpy supports prefix segments only: the prefix ending at the
+    switch epoch is bitwise the full run's prefix."""
+    wl = _drift_wl()
+    cfgs = [{}]
+    full = run_simulation_batch(wl, "static", cfgs, seeds=0,
+                                sampler="sparse", backend="numpy")[0]
+    prefix = run_simulation_segment(wl, "static", cfgs, seeds=0,
+                                    sampler="sparse", backend="numpy",
+                                    epoch_stop=30)
+    assert np.array_equal(prefix["wall_ms"][:, 0],
+                          np.asarray(full.epoch_wall_ms)[:30])
+    with pytest.raises(ValueError, match="prefix"):
+        run_simulation_segment(wl, "static", cfgs, seeds=0,
+                               sampler="sparse", backend="numpy",
+                               epoch_start=30)
+
+
+def test_drift_run_compiles_once_per_shape():
+    """One drifting run = ONE compiled shape: phase switches never
+    retrace (fixed n_pages via padding; epoch ids travel as data)."""
+    wl = _drift_wl("drift-hotspot")
+    cfg = get_space("hemem").default_config()
+    before = len(engine_jax.compiled_cache_info())
+    run_simulation_batch(wl, "hemem", [cfg, dict(cfg)], seeds=0,
+                         sampler="sparse", backend="jax")
+    added = len(engine_jax.compiled_cache_info()) - before
+    assert added <= 1
+
+
+def test_recompile_warns_once_per_cause(caplog):
+    """Repeated same-cause recompiles (e.g. alternating batch widths at
+    phase switches) warn ONCE; segment-length-only changes never warn."""
+    wl = _drift_wl("drift-hotspot", scale=0.025, seed=11)
+    cfg = get_space("hemem").default_config()
+    engine_jax.reset_recompile_warnings()
+
+    def seg(B, lo, hi):
+        run_simulation_segment(wl, "hemem", [dict(cfg)] * B, seeds=0,
+                               sampler="sparse", backend="jax",
+                               epoch_start=0, epoch_stop=hi - lo)
+
+    with caplog.at_level(logging.WARNING, logger="repro.core.engine_jax"):
+        seg(1, 0, 10)    # first compile of this (engine, n, sampler): silent
+        seg(2, 0, 10)    # B changed: warn
+        seg(1, 0, 20)    # n_epochs-only change: debug, not a warning
+        seg(2, 0, 20)    # same cause as the B=2 compile: suppressed
+    warnings = [r for r in caplog.records if r.levelno >= logging.WARNING]
+    assert len(warnings) == 1, \
+        [r.getMessage() for r in warnings]
+    assert "B" in warnings[0].getMessage()

@@ -1,0 +1,180 @@
+"""Online re-tuning: window loop, warm restart, hysteresis guard,
+journal kill/resume byte-identity, and the fleet x ASHA fail-fast.
+
+Contracts pinned here (see ``repro.core.tune_online``):
+
+* ``Study.tune(online=True)`` re-adapts on a drifting trace: it detects
+  phase changes, applies config switches behind the hysteresis/dwell
+  guard, and by construction can never thrash (``thrash_events == 0``);
+* the run is a deterministic function of ``(spec, seed, parameters)`` —
+  two runs journal byte-identical files, and a killed run resumed from a
+  truncated journal (torn final line included) reproduces the
+  uninterrupted journal byte for byte;
+* warm restart (``SMACOptimizer(seed_configs=...)``) suggests the seeded
+  elites first, before default/random init;
+* ``executor="fleet"`` with ``scheduler="asha"`` fails fast (it used to
+  silently run every trial at full budget — ROADMAP 3a).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import DriftSpec, ExperimentSpec, SimOptions, Study
+from repro.core.bo.smac import SMACOptimizer
+from repro.core.knobs import get_space
+
+pytestmark = []
+
+jax = pytest.importorskip("jax")
+
+# a tiny 2-phase hot-set rotation: enough epochs for two windows per
+# phase at W=4, small enough that the whole suite compiles one shape
+TINY = DriftSpec.hotspot(base="gups", n_phases=2, phase_epochs=8)
+
+
+def _study(seed=0, scale=0.03):
+    return Study(ExperimentSpec(
+        engine="hemem", workload=dict(name=TINY.register(), scale=scale),
+        options=SimOptions(seed=seed, backend="jax", crn=True,
+                           sampler="sparse")))
+
+
+def _tune(study, **kw):
+    args = dict(online=True, window_epochs=4, batch_size=3, budget=12,
+                seed=1)
+    args.update(kw)
+    return study.tune(**args)
+
+
+# ---------------------------------------------------------------------------
+# the loop end to end
+# ---------------------------------------------------------------------------
+
+def test_online_smoke_readapts_without_thrash():
+    res = _tune(_study())
+    assert len(res.windows) == 4              # 16 epochs / W=4
+    assert res.total_wall_ms > 0
+    assert res.evals_used <= 12
+    assert res.thrash_events == 0             # guard makes it structural
+    assert res.detections >= 1                # the rotation is detected
+    # every window journals the full decision record
+    w = res.windows[1]
+    assert w.epoch_lo == 4 and w.epoch_hi == 8
+    assert w.deployed and len(w.candidate_walls_ms) == len(w.candidates)
+    assert res.windows[1].divergence is not None
+
+
+def test_online_deployed_wall_is_cumulative():
+    res = _tune(_study())
+    assert res.total_wall_ms == pytest.approx(
+        float(res.deployed_walls.sum()))
+
+
+def test_online_switch_requires_hysteresis_margin():
+    """hysteresis=1-eps means no candidate can ever clear the margin:
+    zero switches, and the would-be wins are counted as guard blocks."""
+    res = _tune(_study(), hysteresis=0.999)
+    assert res.switches == 0
+    assert res.thrash_events == 0
+
+
+def test_online_budget_caps_candidate_evals():
+    res = _tune(_study(), budget=5)
+    assert res.evals_used <= 5
+
+
+# ---------------------------------------------------------------------------
+# determinism + journal kill/resume
+# ---------------------------------------------------------------------------
+
+def test_online_journal_deterministic_and_resumable(tmp_path):
+    j1, j2, jt = (str(tmp_path / n) for n in ("a.jsonl", "b.jsonl",
+                                              "torn.jsonl"))
+    _tune(_study(), journal=j1)
+    _tune(_study(), journal=j2)
+    ref = open(j1, "rb").read()
+    assert open(j2, "rb").read() == ref       # deterministic twin
+
+    # kill mid-study: keep 3 complete events plus a TORN 4th line, resume
+    lines = ref.splitlines(keepends=True)
+    assert len(lines) >= 5
+    with open(jt, "wb") as f:
+        f.write(b"".join(lines[:3]) + lines[3][: len(lines[3]) // 2])
+    res = _tune(_study(), journal=jt, resume=True)
+    assert open(jt, "rb").read() == ref       # byte-identical resume
+    assert res.thrash_events == 0
+
+
+def test_online_resume_rejects_mismatched_params(tmp_path):
+    j = str(tmp_path / "j.jsonl")
+    _tune(_study(), journal=j)
+    with pytest.raises(ValueError, match="diverged"):
+        _tune(_study(), journal=j, resume=True, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# argument validation
+# ---------------------------------------------------------------------------
+
+def test_online_requires_window_epochs():
+    with pytest.raises(ValueError, match="window_epochs"):
+        _study().tune(online=True)
+
+
+def test_window_epochs_requires_online():
+    with pytest.raises(ValueError, match="online=True"):
+        _study().tune(window_epochs=4)
+
+
+def test_online_rejects_async_executor():
+    with pytest.raises(ValueError, match="incompatible"):
+        _tune(_study(), executor="async")
+
+
+def test_online_requires_jax_backend():
+    st = Study(ExperimentSpec(
+        engine="hemem", workload=dict(name=TINY.register(), scale=0.03),
+        options=SimOptions(backend="numpy")))
+    with pytest.raises(ValueError, match="jax"):
+        _tune(st)
+
+
+# ---------------------------------------------------------------------------
+# warm restart: seeded elites go out first
+# ---------------------------------------------------------------------------
+
+def test_seed_configs_suggested_first_in_order():
+    space = get_space("hemem")
+    rng = np.random.default_rng(0)
+    elites = [space.sample(rng) for _ in range(3)]
+    opt = SMACOptimizer(space, seed=0, seed_configs=elites)
+    assert [opt.ask() for _ in range(3)] == elites
+
+
+def test_seed_configs_fill_batch_head_then_backfill():
+    space = get_space("hemem")
+    rng = np.random.default_rng(0)
+    elites = [space.sample(rng) for _ in range(2)]
+    opt = SMACOptimizer(space, seed=0, seed_configs=elites)
+    batch = opt.ask_batch(5)
+    assert len(batch) == 5
+    assert batch[:2] == elites
+    # more seeds than the batch: the remainder stays queued
+    opt2 = SMACOptimizer(space, seed=0, seed_configs=elites * 3)
+    assert len(opt2.ask_batch(4)) == 4
+    assert opt2.ask() == elites[0]  # 5th seed still queued
+
+
+# ---------------------------------------------------------------------------
+# fleet x ASHA: fail fast instead of silently skipping early stopping
+# ---------------------------------------------------------------------------
+
+def test_fleet_asha_fails_fast():
+    st = Study(ExperimentSpec(
+        engine="hemem", workload=dict(name="gups", scale=0.03),
+        options=SimOptions(backend="jax", sampler="sparse")))
+    with pytest.raises(NotImplementedError,
+                       match="full-epoch only.*ROADMAP"):
+        st.tune(budget=4, executor="fleet", scheduler="asha", workers=2)
