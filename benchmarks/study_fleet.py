@@ -20,7 +20,14 @@ on:
   expired lease;
 * the faulty run's journal — including its ``lease``/``expire``/
   ``reissue`` lifecycle events — validates against
-  ``tools/journal_schema.py``.
+  ``tools/journal_schema.py``;
+* **socket transport under latency** (hardened-fleet PR): the same study
+  over the authenticated frame codec with injected per-frame link
+  latency (``FaultPlan(net_delay_s=...)``) stays bitwise identical —
+  slower frames, same decisions;
+* **ASHA over the fleet** (ROADMAP 3a): ``scheduler="asha"`` on the
+  socket fleet under combined kills + latency matches the local async
+  ASHA incumbent bitwise, with early stopping actually saving epochs.
 
 The numpy backend keeps worker processes fork-cheap (no per-respawn jax
 import/compile), which is what makes a kill-every-8-units fault schedule
@@ -31,6 +38,7 @@ Usage::
 
     PYTHONPATH=src python -m benchmarks.study_fleet [--quick]
         [--budget N] [--workers N] [--scale S] [--seed S] [--kill-every K]
+        [--net-delay S]
 """
 
 from __future__ import annotations
@@ -54,7 +62,8 @@ def _study(scale: float, seed: int) -> Study:
 
 
 def run(quick: bool = False, budget: int = None, workers: int = 2,
-        scale: float = None, seed: int = 0, kill_every: int = 8) -> dict:
+        scale: float = None, seed: int = 0, kill_every: int = 8,
+        net_delay: float = 0.002) -> dict:
     budget = budget if budget is not None else (48 if quick else 512)
     scale = scale if scale is not None else (0.1 if quick else 0.5)
     n_init = min(20, max(4, budget // 8))
@@ -109,6 +118,43 @@ def run(quick: bool = False, budget: int = None, workers: int = 2,
           f"deaths={fs['n_worker_deaths']} respawns={fs['n_respawns']} "
           f"reissues={fs['n_reissues']}", flush=True)
 
+    # socket transport + injected per-frame link latency: the hardened
+    # codec (HMAC-signed, capped, replay-protected frames) under a slow
+    # link — frames arrive late, decisions do not change
+    t0 = time.time()
+    r_sock = _study(scale, seed).tune(
+        executor="fleet", workers=workers, pool="socket",
+        faults=FaultPlan(net_delay_s=net_delay), **kw)
+    t_sock = time.time() - t0
+    sfs = r_sock.fleet
+    print(f"  fleet workers={workers} socket+{net_delay * 1e3:.0f}ms: "
+          f"{t_sock:7.2f}s  best={r_sock.best_value:8.3f}s  "
+          f"util={r_sock.utilization:.2f}  "
+          f"reconnects={sfs['n_reconnects']} "
+          f"rejects={sfs['n_rejected_frames']}", flush=True)
+
+    # ASHA over the fleet (ROADMAP 3a), under kills AND link latency at
+    # once: rung segments re-derive [0, hi) from scratch, so promote/
+    # early-stop composes with lease expiry + straggler re-issue
+    t0 = time.time()
+    r_asha_async = _study(scale, seed).tune(
+        executor="async", slots=workers, scheduler="asha", **kw)
+    t_asha_async = time.time() - t0
+    t0 = time.time()
+    r_asha_fleet = _study(scale, seed).tune(
+        executor="fleet", workers=workers, pool="socket",
+        scheduler="asha",
+        faults=FaultPlan(kill_every=kill_every, net_delay_s=net_delay),
+        max_respawns=budget, **kw)
+    t_asha_fleet = time.time() - t0
+    afs = r_asha_fleet.fleet
+    print(f"  fleet workers={workers} asha+kills+lat: {t_asha_fleet:7.2f}s  "
+          f"best={r_asha_fleet.best_value:8.3f}s  "
+          f"util={r_asha_fleet.utilization:.2f}  "
+          f"saved={r_asha_fleet.asha_epochs_saved_frac:.2f} "
+          f"(async asha: {t_asha_async:.2f}s "
+          f"best={r_asha_async.best_value:.3f}s)", flush=True)
+
     # determinism receipt: the faulty journal (with its lease lifecycle
     # events) must validate against the standalone schema checker
     import sys
@@ -137,12 +183,17 @@ def run(quick: bool = False, budget: int = None, workers: int = 2,
         "n_epochs": wl.n_epochs, "n_pages": wl.n_pages,
         "budget": budget, "n_init": n_init, "seed": seed,
         "workers": workers, "window": window, "kill_every": kill_every,
+        "net_delay_s": net_delay,
         "cpu_count": os.cpu_count(),
         "arms": {
             "async_local": _arm(r_async, t_async),
             "fleet_w1": _arm(r_f1, t_f1),
             f"fleet_w{workers}": _arm(r_fw, t_fw),
             f"fleet_w{workers}_kills": _arm(r_fault, t_fault),
+            f"fleet_w{workers}_socket_latency": _arm(r_sock, t_sock),
+            "asha_async": _arm(r_asha_async, t_asha_async),
+            f"asha_fleet_w{workers}_kills_latency":
+                _arm(r_asha_fleet, t_asha_fleet),
         },
         "reissue_overhead_s": float(fs["reissue_overhead_s"]),
         "time_to_recover_s": {
@@ -185,6 +236,22 @@ def run(quick: bool = False, budget: int = None, workers: int = 2,
               f"tools/journal_schema.py: "
               f"{'ok' if not journal_problems else '; '.join(journal_problems[:3])}; "
               f"{n_expire} expire / {n_reissue} reissue events"),
+        claim(f"authenticated socket transport under {net_delay * 1e3:.0f}ms "
+              f"per-frame latency is bitwise identical",
+              r_sock.best_value == r_fw.best_value,
+              f"socket+latency best {r_sock.best_value!r} == process-pool "
+              f"{r_fw.best_value!r}; {sfs['n_rejected_frames']} rejected "
+              f"frames, {sfs['n_reconnects']} reconnects"),
+        claim("ASHA over the fleet under kills + latency matches async "
+              "ASHA bitwise, with real early stopping",
+              r_asha_fleet.best_value == r_asha_async.best_value
+              and r_asha_fleet.trials == r_asha_async.trials
+              and r_asha_fleet.asha_epochs_saved_frac > 0,
+              f"fleet asha best {r_asha_fleet.best_value!r} == async asha "
+              f"{r_asha_async.best_value!r}; "
+              f"{r_asha_fleet.asha_epochs_saved_frac:.1%} epochs saved, "
+              f"{afs['n_worker_deaths']} deaths, "
+              f"{afs['n_reissues']} re-issues"),
     ]
     print_claims(out["claims"])
     save("BENCH_study_fleet", out)
@@ -215,9 +282,12 @@ def main() -> None:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--kill-every", type=int, default=8,
                    help="kill the worker holding every K-th unit")
+    p.add_argument("--net-delay", type=float, default=0.002,
+                   help="injected per-frame link latency (socket arms)")
     args = p.parse_args()
     run(quick=args.quick, budget=args.budget, workers=args.workers,
-        scale=args.scale, seed=args.seed, kill_every=args.kill_every)
+        scale=args.scale, seed=args.seed, kill_every=args.kill_every,
+        net_delay=args.net_delay)
 
 
 if __name__ == "__main__":

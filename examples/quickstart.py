@@ -79,6 +79,31 @@ Receipts (injected 1-in-8 worker kills, utilization, re-issue overhead):
 ``python -m benchmarks.study_fleet`` -> ``BENCH_study.json["fleet"]``;
 fault injectors for tests live in ``repro.core.tune_service.faults``.
 
+**Hardened multi-host fleets** (PR 10): ``--fleet-spec FLEET.json``
+deploys the coordinator against a frozen
+:class:`~repro.core.tune_service.FleetSpec` — ONE artifact holding the
+bind address, worker count/hosts, heartbeat + lease parameters and the
+shared ``auth_key`` that every socket frame is HMAC-signed with
+(length-capped before allocation, replay-protected, bounded reads;
+workers greet with a signed hello before any unit is leased, so
+reachability no longer implies trust).  Mint a spec and bring up its
+workers with the launcher, then point the study at it::
+
+    python tools/fleet_launch.py --init fleet.json --workers 4
+    python tools/fleet_launch.py fleet.json &      # or --print for the
+                                                   # per-host commands
+    PYTHONPATH=src python examples/quickstart.py --executor fleet \\
+        --fleet-spec fleet.json --scheduler asha --journal study.jsonl
+
+Workers re-dial with backoff when the link drops and the coordinator
+re-attaches the live lease (``reconnect`` in the journal); invalid
+frames are journaled as ``reject`` events and the connection is dropped.
+``--scheduler asha`` now composes with the fleet: rung segments
+re-derive their epoch prefix from scratch, so early stopping survives
+lease expiry and re-issue bitwise.  The auth key is a secret — it rides
+the spec file or the ``REPRO_FLEET_KEY`` environment variable, never
+argv or the journal; keep spec files out of version control.
+
 **Online re-tuning under drift** (PR 9): ``--drift`` swaps the workload
 for a registered phase-shifting trace (:mod:`repro.core.drift`) and
 ``--online`` runs the sliding-window online tuner instead of a one-shot
@@ -149,6 +174,12 @@ def main():
                     help="async evaluation slots (--executor async)")
     ap.add_argument("--fleet-workers", type=int, default=2,
                     help="fleet worker processes (--executor fleet)")
+    ap.add_argument("--fleet-spec", metavar="SPEC.json", default=None,
+                    help="frozen FleetSpec JSON from tools/fleet_launch.py "
+                         "--init; switches the fleet to the authenticated "
+                         "socket transport and supplies workers/heartbeat/"
+                         "auth key (--executor fleet; overrides "
+                         "--fleet-workers)")
     ap.add_argument("--scheduler", choices=("asha",), default=None,
                     help="ASHA successive-halving early stopping "
                          "(--executor async)")
@@ -199,7 +230,8 @@ def main():
                 print(f"  {k:28s} {dflt[k]:>8} -> {v}")
         return
     if args.executor == "fleet":
-        mode = f"fleet workers={args.fleet_workers}"
+        mode = f"fleet spec={args.fleet_spec}" if args.fleet_spec \
+            else f"fleet workers={args.fleet_workers}"
     elif args.executor == "async":
         mode = f"async slots={args.slots}" + \
             (f" +{args.scheduler}" if args.scheduler else "")
@@ -210,8 +242,14 @@ def main():
     print(f"Tuning HeMem for {study.key} (budget {args.budget}, {mode})...")
     print(f"spec: {json.dumps(spec.to_dict())}\n")
     if args.executor in ("async", "fleet"):
-        fleet_kw = {"workers": args.fleet_workers} \
-            if args.executor == "fleet" else {}
+        fleet_kw = {}
+        if args.executor == "fleet":
+            if args.fleet_spec:
+                from repro.core.tune_service import FleetSpec
+                # the spec supplies workers/heartbeat/lease/auth key
+                fleet_kw = {"fleet_spec": FleetSpec.load(args.fleet_spec)}
+            else:
+                fleet_kw = {"workers": args.fleet_workers}
         res = study.tune(budget=args.budget, seed=0, verbose=True,
                          executor=args.executor, slots=args.slots,
                          scheduler=args.scheduler, journal=args.journal,

@@ -162,6 +162,7 @@ class Study:
              heartbeat_s: Optional[float] = None,
              lease_deadline: Optional[int] = None,
              max_respawns: Optional[int] = None,
+             fleet_spec: Optional[Any] = None,
              online: bool = False,
              window_epochs: Optional[int] = None,
              hysteresis: float = 0.05,
@@ -268,6 +269,32 @@ class Study:
           picks the transport: ``"process"`` (workers spawned on this
           box) or ``"socket"`` (workers connect over TCP via ``python -m
           repro.core.tune_service.worker --connect HOST:PORT``).
+        * ``fleet_spec`` — a frozen
+          :class:`~repro.core.tune_service.FleetSpec` (implies
+          ``pool="socket"``): ONE JSON artifact carrying the bind
+          address, the shared ``auth_key``, worker count/hosts and the
+          transport caps.  ``tools/fleet_launch.py`` brings up the
+          matching workers (local subprocesses, or printed per-host
+          commands) and health-checks every greet.  The socket transport
+          is authenticated end to end: every frame is HMAC-SHA256-signed
+          with the spec's key, length-capped *before* allocation,
+          replay-protected by per-connection sequence numbers, and
+          bounded in read time — a worker must present a signed hello
+          before any unit is leased, so the old "only connect workers to
+          a coordinator you trust" caveat is replaced by key possession.
+          Invalid frames are journaled as ``reject`` events and drop the
+          connection; a worker whose link drops re-dials with backoff
+          and has its in-flight lease re-attached (``reconnect``) or
+          safely expired (first-commit-wins absorbs the duplicate).  The
+          auth key is a secret: it never enters the journal — keep spec
+          files out of version control.
+        * ``scheduler="asha"`` composes with the fleet: rung units
+          re-derive their epoch prefix by re-running ``[0, hi)`` from
+          scratch (bitwise-identical to the checkpointed path — partial
+          carries never travel over the wire), so promotion/early-stop
+          decisions, heartbeat expiry, straggler re-issue and
+          kill/resume all compose unchanged, and the incumbent matches
+          the async-executor ASHA run bitwise.
         * ``timeout_s`` — per-unit evaluation bound: a hung objective
           becomes an ``{"error": "timeout..."}`` result (then a retry /
           FAILED trial) instead of wedging the study.  Also honoured by
@@ -288,9 +315,10 @@ class Study:
           never wedged.
         * ``faults`` — a
           :class:`~repro.core.tune_service.FaultPlan` of injected worker
-          faults (kill/stall/hang/drop/dup/delay, keyed by unit +
-          attempt) for robustness testing; see
-          :mod:`repro.core.tune_service.faults`.
+          faults (kill/stall/hang/drop/dup/delay, plus the socket
+          transport's corrupt/truncate/replay/partition frame faults and
+          ``net_delay_s`` link latency, keyed by unit + attempt) for
+          robustness testing; see :mod:`repro.core.tune_service.faults`.
 
         **Online re-tuning under drift** (``online=True,
         window_epochs=W``).  For phase-shifting workloads
@@ -364,7 +392,8 @@ class Study:
                 executor="fleet" if executor == "fleet" else "local",
                 workers=workers, retries=retries, timeout_s=timeout_s,
                 faults=faults, heartbeat_s=heartbeat_s,
-                lease_deadline=lease_deadline, max_respawns=max_respawns)
+                lease_deadline=lease_deadline, max_respawns=max_respawns,
+                fleet_spec=fleet_spec)
             return service.run()
         if executor != "sync":
             raise ValueError(f"unknown executor {executor!r}; expected "
@@ -373,11 +402,11 @@ class Study:
                 or resume or window is not None or workers is not None \
                 or timeout_s is not None or faults is not None \
                 or heartbeat_s is not None or lease_deadline is not None \
-                or max_respawns is not None:
+                or max_respawns is not None or fleet_spec is not None:
             raise ValueError(
                 "slots/scheduler/journal/resume/window/workers/timeout_s/"
-                "faults/heartbeat_s/lease_deadline/max_respawns require "
-                "executor='async' or 'fleet'")
+                "faults/heartbeat_s/lease_deadline/max_respawns/fleet_spec "
+                "require executor='async' or 'fleet'")
         if objective is None:
             def objective(config: Config) -> float:
                 return self.run(configs=[config])[0].total_s

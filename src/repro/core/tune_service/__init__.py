@@ -13,10 +13,16 @@ scheduler="asha"|None, journal=..., resume=...)``:
   lease-and-commit coordinator serving ONE shared work queue to remote
   worker processes, with heartbeats, straggler re-issue (duplicate
   execution is safe — first commit wins, the twin is asserted bitwise
-  equal), bounded respawns and graceful degradation to local slots;
+  equal), bounded respawns, worker reconnect-with-backoff and graceful
+  degradation to local slots;
+* :mod:`.transport` — the authenticated socket frame codec (HMAC-signed,
+  length-capped, replay-protected, bounded reads) plus the frozen-JSON
+  :class:`~repro.core.tune_service.transport.FleetSpec` that
+  ``tools/fleet_launch.py`` deploys fleets from;
 * :mod:`.faults` — the fault-injection harness (kill / stall / hang /
-  drop / dup / delay, keyed by deterministic unit coordinates) driving
-  the robustness test matrix;
+  drop / dup / delay, plus the network-shaped corrupt / truncate /
+  replay / partition / latency injections, keyed by deterministic unit
+  coordinates) driving the robustness test matrix;
 * :mod:`.asha` — asynchronous successive halving over ¼/½/full epoch
   rungs;
 * :mod:`.journal` — the JSON-lines study journal; a killed study resumes
@@ -32,6 +38,10 @@ from .faults import (FailNTimes, FaultPlan, KillNTimes, NO_FAULTS,
                      SlowObjective, tear_journal)
 from .journal import StudyJournal, VERSION, read_events
 from .service import AsyncTuningResult, TuneService
+from .transport import (FleetSpec, FrameChannel, FrameError,
+                        FrameReplayError, FrameSignatureError,
+                        FrameTimeoutError, FrameTooLargeError,
+                        FrameTruncatedError)
 from .trial import (FAILED, PAUSED, PENDING, RUNNING, TERMINATED,
                     TRANSITIONS, Trial)
 
@@ -42,6 +52,9 @@ __all__ = [
     "SlowObjective", "tear_journal",
     "StudyJournal", "VERSION", "read_events",
     "AsyncTuningResult", "TuneService",
+    "FleetSpec", "FrameChannel", "FrameError", "FrameReplayError",
+    "FrameSignatureError", "FrameTimeoutError", "FrameTooLargeError",
+    "FrameTruncatedError",
     "FAILED", "PAUSED", "PENDING", "RUNNING", "TERMINATED",
     "TRANSITIONS", "Trial",
 ]

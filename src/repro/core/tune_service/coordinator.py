@@ -4,7 +4,9 @@ The multi-host rung of the tuning service (ROADMAP item 3).  One
 coordinator owns the study — the journal, the optimizer, the canonical
 commit order — and serves work units from ONE shared queue to N
 :mod:`.worker` processes (``pool="process"`` on this box, ``pool="socket"``
-across hosts).  The class is a drop-in for
+across hosts, speaking the authenticated capped-frame codec of
+:mod:`.transport` and deployable from a frozen
+:class:`~repro.core.tune_service.transport.FleetSpec`).  The class is a drop-in for
 :class:`~repro.core.tune_service.executor.TrialExecutor` (same
 ``submit``/``submit_ready``/``pop_next``/``outstanding`` surface), so the
 :class:`~repro.core.tune_service.service.TuneService` control loop — and
@@ -36,6 +38,15 @@ the unit.  Two runs under the same fault plan therefore write
 byte-identical journals, and a coordinator SIGKILLed mid-re-issue
 resumes byte-identically (the re-issue in flight simply replays).
 
+**Rejects and reconnects.**  On the socket transport, a frame that fails
+validation (bad signature, oversize, replayed, truncated) drops its
+connection and — when the sender held a live lease — journals a
+``reject`` into the unit's history before expiring the lease; a worker
+whose link merely dropped re-dials, re-greets under its identity and has
+its live lease re-attached (journaled as ``reconnect``).  Both events
+ride the same commit-time history mechanism as ``lease``/``expire``/
+``reissue``, so the journal stays deterministic.
+
 **Graceful degradation.**  Dead process workers are respawned up to
 ``max_respawns`` times — each respawn first promotes a booted hot-spare
 worker when one is up, so the slot refills instantly and the fresh
@@ -58,8 +69,9 @@ import numpy as np
 
 from .executor import _timed_safe
 from .faults import NO_FAULTS, FaultPlan
-from .worker import (DEFAULT_HEARTBEAT_S, process_main, recv_frame,
-                     send_frame, socket_main)
+from .transport import (FleetSpec, FrameChannel, FrameError, accept_greet,
+                        reject_reason)
+from .worker import DEFAULT_HEARTBEAT_S, process_main, socket_main
 
 FLEET_POOLS = ("process", "socket")
 
@@ -207,22 +219,39 @@ class _ProcessFleet:
 
 
 class _SocketFleet:
-    """Socket-transport fleet: TCP workers (spawned locally for tests and
-    same-box runs; remote hosts join via ``python -m
-    repro.core.tune_service.worker --connect HOST:PORT``)."""
+    """Socket-transport fleet behind the authenticated frame codec
+    (:mod:`.transport`): every connection must greet with a signed hello
+    before its worker id exists coordinator-side, every frame is
+    HMAC-verified, length-capped *before* allocation and bounded in read
+    time, and a frame that fails any gate produces a ``frame_reject``
+    inbox message plus a dropped connection — never a wedged reader.
+
+    A dropped connection is a *disconnect*, not a death: workers re-dial
+    (:func:`~repro.core.tune_service.worker.socket_main`) and a re-greet
+    under a known id atomically swaps the connection back in.  Only a
+    self-spawned worker's process sentinel proves death; external workers
+    (``spec.hosts`` non-empty, launched by ``tools/fleet_launch.py``) are
+    never declared dead — a silent one expires its lease and is written
+    off as suspect until it speaks again."""
 
     def __init__(self, n: int, heartbeat_s: float, faults: FaultPlan,
-                 cache_dir: Optional[str], host: str = "127.0.0.1"):
-        self._srv = socket.create_server((host, 0))
+                 cache_dir: Optional[str],
+                 spec: Optional[FleetSpec] = None):
+        if spec is None:
+            # self-contained fleet: mint an ephemeral key for this run
+            spec = FleetSpec.generate(workers=n, heartbeat_s=heartbeat_s)
+        self.spec = spec
+        self._key = spec.key_bytes
+        self._srv = socket.create_server((spec.host, spec.port))
         self.address: Tuple[str, int] = self._srv.getsockname()[:2]
         self._inbox: "queue_mod.Queue" = queue_mod.Queue()
         self._heartbeat_s = heartbeat_s
         self._lock = threading.Lock()
-        self._conns: Dict[int, socket.socket] = {}
-        self._send_locks: Dict[int, threading.Lock] = {}
-        self._eof: set = set()
-        self._reaped: set = set()
+        self._chans: Dict[int, FrameChannel] = {}
+        self._dc: set = set()      # disconnected (may re-dial); not dead
+        self._reaped: set = set()  # provably dead (process sentinel)
         self._closing = False
+        self._boot_deadline = time.monotonic() + spec.boot_grace_s
         self._accept_thread = threading.Thread(
             target=self._accept_loop, daemon=True,
             name="repro-fleet-accept")
@@ -236,16 +265,25 @@ class _SocketFleet:
         self._cache_dir = cache_dir
         self._procs: Dict[int, Any] = {}
         self._next_wid = 0
-        for _ in range(n):
-            self.spawn_worker()
+        if not spec.external:
+            for _ in range(n):
+                self.spawn_worker()
 
     def spawn_worker(self) -> int:
+        if self.spec.external:
+            return -1  # externally-launched workers cannot be respawned
         wid = self._next_wid
         self._next_wid += 1
         p = self._ctx.Process(
             target=socket_main,
             args=(self.address, wid, self._heartbeat_s, self._faults,
                   self._cache_dir),
+            kwargs={"key": self._key,
+                    "max_frame": self.spec.max_frame_bytes,
+                    "frame_timeout_s": self.spec.frame_timeout_s,
+                    "max_redials": self.spec.max_redials,
+                    "redial_backoff_s": self.spec.redial_backoff_s,
+                    "net_delay_s": self._faults.net_delay_s},
             daemon=True, name=f"repro-fleet-w{wid}")
         p.start()
         self._procs[wid] = p
@@ -262,24 +300,43 @@ class _SocketFleet:
                              daemon=True).start()
 
     def _reader(self, conn: socket.socket) -> None:
-        wid = None
+        chan = FrameChannel(conn, self._key,
+                            max_frame=self.spec.max_frame_bytes,
+                            frame_timeout_s=self.spec.frame_timeout_s)
         try:
-            hello = recv_frame(conn)
-            wid = int(hello["worker"])
-            with self._lock:
-                self._conns[wid] = conn
-                self._send_locks[wid] = threading.Lock()
-            self._inbox.put(hello)
+            wid = accept_greet(chan)
+        except (FrameError, EOFError, OSError) as e:
+            # an unauthenticated stranger (or a garbled greet): no worker
+            # id was ever established, so nothing is leased and nothing
+            # reaches the journal — count it and drop the connection
+            self._inbox.put({"type": "frame_reject", "worker": None,
+                             "reason": reject_reason(e)})
+            chan.close()
+            return
+        with self._lock:
+            old = self._chans.get(wid)
+            self._chans[wid] = chan
+            self._dc.discard(wid)
+        if old is not None:
+            old.close()  # a re-greet supersedes the stale connection
+        self._inbox.put({"type": "hello", "worker": wid})
+        try:
             while True:
-                self._inbox.put(recv_frame(conn))
+                msg = chan.recv()
+                if msg is not None:
+                    self._inbox.put(msg)
         except (EOFError, OSError):
-            if wid is not None:
-                with self._lock:
-                    self._eof.add(wid)
-            try:
-                conn.close()
-            except OSError:
-                pass
+            pass  # a disconnect: the worker may re-dial and re-greet
+        except FrameError as e:
+            # an authenticated connection produced an invalid frame: the
+            # stream cannot be trusted past this point — reject + drop
+            self._inbox.put({"type": "frame_reject", "worker": wid,
+                             "reason": reject_reason(e)})
+        finally:
+            with self._lock:
+                if self._chans.get(wid) is chan:
+                    self._dc.add(wid)
+            chan.close()
 
     def poll(self, timeout: float) -> Optional[Dict[str, Any]]:
         try:
@@ -290,31 +347,44 @@ class _SocketFleet:
             return None
 
     def send(self, wid: int, msg: Dict[str, Any]) -> None:
-        with self._send_locks[wid]:
-            send_frame(self._conns[wid], msg)
+        with self._lock:
+            chan = self._chans.get(wid)
+        if chan is None:
+            raise OSError(f"worker {wid} has no live connection")
+        chan.send(msg)
 
     def dispatchable(self) -> List[int]:
         with self._lock:
-            return [w for w in self._conns
-                    if w not in self._eof and w not in self._reaped]
+            return [w for w in self._chans
+                    if w not in self._dc and w not in self._reaped]
 
     def n_eligible(self, suspect) -> int:
-        # not-yet-connected spawned workers count: they are on their way;
-        # suspects (wedged, written off until they speak) do not
+        # self-spawned workers count while their PROCESS is alive even if
+        # the connection is down (they are redialing — that is the point
+        # of reconnect); externals count while connected, plus the ones
+        # still expected to greet within the boot grace window
         with self._lock:
-            live_procs = sum(1 for w, p in self._procs.items()
-                             if w not in self._reaped and w not in self._eof
-                             and w not in suspect and p.is_alive())
-            live_ext = sum(1 for w in self._conns
-                           if w not in self._eof and w not in self._reaped
-                           and w not in suspect and w not in self._procs)
-        return live_procs + live_ext
+            if self._procs:
+                live = sum(1 for w, p in self._procs.items()
+                           if w not in self._reaped and w not in suspect
+                           and p.is_alive())
+                ext = sum(1 for w in self._chans
+                          if w not in self._dc and w not in self._reaped
+                          and w not in suspect and w not in self._procs)
+                return live + ext
+            live = sum(1 for w in self._chans
+                       if w not in self._dc and w not in self._reaped
+                       and w not in suspect)
+            if time.monotonic() < self._boot_deadline:
+                live += max(0, self.spec.workers - len(self._chans))
+            return live
 
     def reap_dead(self) -> List[int]:
+        # only a process sentinel proves death now that connections
+        # reconnect; a silent external worker is handled by lease expiry
         with self._lock:
-            dead = set(self._eof) - self._reaped
-            dead |= {w for w, p in self._procs.items()
-                     if w not in self._reaped and not p.is_alive()}
+            dead = {w for w, p in self._procs.items()
+                    if w not in self._reaped and not p.is_alive()}
             self._reaped.update(dead)
         return sorted(dead)
 
@@ -323,7 +393,7 @@ class _SocketFleet:
         for wid in self.dispatchable():
             try:
                 self.send(wid, {"type": "shutdown"})
-            except OSError:
+            except (OSError, FrameError):
                 pass
         try:
             self._srv.close()
@@ -338,11 +408,8 @@ class _SocketFleet:
                 if p.is_alive():
                     p.kill()
         with self._lock:
-            for conn in self._conns.values():
-                try:
-                    conn.close()
-                except OSError:
-                    pass
+            for chan in self._chans.values():
+                chan.close()
 
 
 class FleetExecutor:
@@ -364,7 +431,19 @@ class FleetExecutor:
                  faults: FaultPlan = NO_FAULTS,
                  max_attempts: int = DEFAULT_MAX_ATTEMPTS,
                  max_respawns: Optional[int] = None,
-                 backoff_s: float = 0.05):
+                 backoff_s: float = 0.05,
+                 fleet_spec: Optional[FleetSpec] = None):
+        if fleet_spec is not None:
+            if pool != "socket":
+                raise ValueError(
+                    f"fleet_spec describes a socket fleet; got "
+                    f"pool={pool!r}")
+            # the spec is the deployment artifact: the externally-launched
+            # workers run with ITS heartbeat/transport parameters, so the
+            # coordinator must agree with it, not with ad-hoc overrides
+            workers = fleet_spec.workers
+            heartbeat_s = fleet_spec.heartbeat_s
+            lease_deadline = fleet_spec.lease_deadline
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if pool not in FLEET_POOLS:
@@ -383,9 +462,13 @@ class FleetExecutor:
             else int(workers)
         self.backoff_s = float(backoff_s)
         from ..simulator import compile_cache_dir
-        cls = _ProcessFleet if pool == "process" else _SocketFleet
-        self._fleet = cls(self.slots, self.heartbeat_s, self.faults,
-                          compile_cache_dir())
+        if pool == "process":
+            self._fleet = _ProcessFleet(self.slots, self.heartbeat_s,
+                                        self.faults, compile_cache_dir())
+        else:
+            self._fleet = _SocketFleet(self.slots, self.heartbeat_s,
+                                       self.faults, compile_cache_dir(),
+                                       spec=fleet_spec)
         # unit state, keyed by canonical sequence number
         self._specs: Dict[int, Tuple[Callable, tuple, Optional[float]]] = {}
         self._queue: "collections.deque[Tuple[int, float]]" = \
@@ -419,6 +502,8 @@ class FleetExecutor:
         self.n_worker_deaths = 0
         self.n_respawns = 0
         self.n_duplicates = 0
+        self.n_reconnects = 0
+        self.n_rejected_frames = 0
         self.reissue_overhead_s = 0.0
         self.recover_s: List[float] = []
         self.degraded = False
@@ -464,6 +549,11 @@ class FleetExecutor:
         """The unit's lease lifecycle events, for commit-time journaling."""
         return self._history.pop(seq, [])
 
+    @property
+    def address(self) -> Optional[Tuple[str, int]]:
+        """The socket fleet's bound (host, port); None for process pools."""
+        return getattr(self._fleet, "address", None)
+
     # -- the pump: messages, liveness, leases, dispatch --------------------
     def _pump(self, block: bool) -> None:
         msg = self._fleet.poll(min(self.heartbeat_s, 0.05) if block else 0.0)
@@ -478,10 +568,47 @@ class FleetExecutor:
     def _handle(self, msg: Dict[str, Any]) -> None:
         kind = msg.get("type")
         wid = msg.get("worker")
+        if kind == "frame_reject":
+            # the transport rejected a frame (bad signature, oversize,
+            # replayed, truncated, ...) and dropped the connection.  If
+            # the sender held a live lease, the lease cannot be trusted to
+            # complete — journal the reject into the unit's history (at
+            # commit time, like every lease event) and expire it.  A
+            # reject with no live lease (an unauthenticated stranger, or
+            # a replayed frame landing after its twin committed) touches
+            # stats only: journaling it would be wall-clock-dependent.
+            self.n_rejected_frames += 1
+            if wid is None:
+                return
+            seq = self._busy.get(wid)
+            lease = self._leases.get(seq) if seq is not None else None
+            if lease is not None and lease["worker"] == wid:
+                self._busy.pop(wid, None)
+                self._history[seq].append(
+                    {"event": "reject", "unit": seq,
+                     "attempt": lease["attempt"],
+                     "reason": msg.get("reason", "frame")})
+                self._expire(seq, "reject")
+            return
         if wid is not None:
             self._suspect.discard(wid)
             self._greeted.add(wid)
         if kind == "hello":
+            # a re-greet from a worker we believe is busy: its connection
+            # dropped and it re-dialed.  If the lease is still live,
+            # re-attach it (refresh the silence clock, journal the
+            # reconnect at commit); if it already expired, leave the
+            # worker marked busy — it is still evaluating its old unit
+            # and will tell us (result, or idle heartbeat) when it frees
+            seq = self._busy.get(wid)
+            if seq is not None:
+                lease = self._leases.get(seq)
+                if lease is not None and lease["worker"] == wid:
+                    lease["last_seen"] = time.monotonic()
+                    self.n_reconnects += 1
+                    self._history[seq].append(
+                        {"event": "reconnect", "unit": seq,
+                         "attempt": lease["attempt"]})
             return
         if kind == "heartbeat":
             unit = msg.get("unit")
@@ -491,7 +618,12 @@ class FleetExecutor:
                 seq = self._busy.get(wid)
                 if seq is not None:
                     lease = self._leases.get(seq)
-                    if lease is not None and lease["worker"] == wid and \
+                    if lease is None:
+                        # the lease already resolved without this worker
+                        # (rejected frame, expiry + late twin): the worker
+                        # is demonstrably idle again — free its slot
+                        self._busy.pop(wid, None)
+                    elif lease["worker"] == wid and \
                             time.monotonic() - lease["issued"] > \
                             3 * self.heartbeat_s:
                         self._busy.pop(wid, None)
@@ -616,9 +748,16 @@ class FleetExecutor:
             self._queue.popleft()
             attempt = self._attempts[seq]
             fn, args, t = self._specs[seq]
-            self._fleet.send(wid, {"type": "unit", "unit": seq,
-                                   "attempt": attempt, "fn": fn,
-                                   "args": args, "timeout_s": t})
+            try:
+                self._fleet.send(wid, {"type": "unit", "unit": seq,
+                                       "attempt": attempt, "fn": fn,
+                                       "args": args, "timeout_s": t})
+            except (OSError, FrameError):
+                # the connection dropped under us (socket transport): the
+                # unit was never leased — requeue it and try other workers
+                self._queue.appendleft((seq, now))
+                self._greeted.discard(wid)
+                continue
             self._leases[seq] = {"worker": wid, "attempt": attempt,
                                  "issued": now, "last_seen": now}
             self._busy[wid] = seq
@@ -677,6 +816,8 @@ class FleetExecutor:
             "n_respawns": self.n_respawns,
             "n_spare_promotions": getattr(self._fleet, "n_promotions", 0),
             "n_duplicate_results": self.n_duplicates,
+            "n_reconnects": self.n_reconnects,
+            "n_rejected_frames": self.n_rejected_frames,
             "reissue_overhead_s": float(self.reissue_overhead_s),
             "time_to_recover_s": [float(x) for x in self.recover_s],
             "degraded": self.degraded,

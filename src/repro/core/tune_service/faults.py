@@ -38,6 +38,38 @@ Injectors (all applied worker-side, where the fleet actually breaks):
     expires, the unit is re-issued, and whichever result lands first
     commits — the late twin is asserted equal against it.
 
+Network-shaped injectors (socket transport only — they mangle frames at
+the codec layer, so the authenticated transport's reject paths are
+exercised by the same deterministic (unit, attempt) coordinates):
+
+``corrupt``
+    The result frame is sent with its last payload byte flipped — the
+    signature no longer verifies, the coordinator journals a
+    ``reject``/``bad-signature`` and drops the connection; the worker
+    re-dials and the unit is re-issued.
+``truncate``
+    Half the result frame is sent, then the connection is closed (a
+    crashed sender / cut link mid-frame).  Closing is what makes the
+    fault deterministic: the coordinator always sees EOF-mid-frame
+    (``truncated``), never a signature race against later heartbeats.
+``replay``
+    The result frame's raw bytes are sent twice.  The second copy has a
+    stale sequence number, so it is rejected as a ``replay`` even though
+    its signature verifies.
+``partition``
+    ``(unit, attempt, seconds)``: the link drops mid-lease — just before
+    the unit's result frame, so the fault fires deterministically (every
+    unit sends exactly one result) — and stays down for ``seconds``: the
+    reconnect-with-backoff path.  The computed result survives the gap
+    worker-side; on re-dial + re-greet the coordinator re-attaches the
+    live lease (journalling ``reconnect``) and the result is delivered —
+    or, if the lease already expired, first-commit-wins absorbs the
+    duplicate.
+``net_delay_s``
+    Uniform latency: every frame send sleeps this long first (the
+    benchmark's socket+latency arm; also settable via the
+    ``REPRO_FLEET_NET_DELAY_S`` env var for CI).
+
 The flaky-objective callables at the bottom inject *evaluation* faults
 (raise / self-SIGKILL) through the normal ``objective=`` path; they are
 module-level classes so process pools can pickle them, and they use
@@ -78,6 +110,12 @@ class FaultPlan:
     drop: Tuple[Tuple[int, int], ...] = ()
     dup: Tuple[Tuple[int, int], ...] = ()
     delay: Tuple[Tuple[int, int, float], ...] = ()
+    corrupt: Tuple[Tuple[int, int], ...] = ()
+    truncate: Tuple[Tuple[int, int], ...] = ()
+    replay: Tuple[Tuple[int, int], ...] = ()
+    partition: Tuple[Tuple[int, int, float], ...] = ()
+    #: uniform injected latency before every frame send (socket transport)
+    net_delay_s: float = 0.0
     #: kill every worker whose unit satisfies ``unit % kill_every == which``
     #: on attempt 0 (the benchmark's "1-in-8 injected worker kills")
     kill_every: int = 0
@@ -91,6 +129,11 @@ class FaultPlan:
         object.__setattr__(self, "dup", _pairs(self.dup))
         object.__setattr__(self, "delay", tuple(
             (int(u), int(a), float(s)) for u, a, s in self.delay))
+        object.__setattr__(self, "corrupt", _pairs(self.corrupt))
+        object.__setattr__(self, "truncate", _pairs(self.truncate))
+        object.__setattr__(self, "replay", _pairs(self.replay))
+        object.__setattr__(self, "partition", tuple(
+            (int(u), int(a), float(s)) for u, a, s in self.partition))
 
     def kills(self, unit: int, attempt: int) -> bool:
         if (unit, attempt) in self.kill:
@@ -116,10 +159,27 @@ class FaultPlan:
                 return s
         return 0.0
 
+    def corrupts(self, unit: int, attempt: int) -> bool:
+        return (unit, attempt) in self.corrupt
+
+    def truncates(self, unit: int, attempt: int) -> bool:
+        return (unit, attempt) in self.truncate
+
+    def replays(self, unit: int, attempt: int) -> bool:
+        return (unit, attempt) in self.replay
+
+    def partitions(self, unit: int, attempt: int) -> float:
+        for u, a, s in self.partition:
+            if (u, a) == (unit, attempt):
+                return s
+        return 0.0
+
     @property
     def empty(self) -> bool:
         return not (self.kill or self.stall or self.hang or self.drop
-                    or self.dup or self.delay or self.kill_every)
+                    or self.dup or self.delay or self.corrupt
+                    or self.truncate or self.replay or self.partition
+                    or self.net_delay_s or self.kill_every)
 
 
 NO_FAULTS = FaultPlan()

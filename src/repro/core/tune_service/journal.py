@@ -46,6 +46,17 @@ Event types (all objects carry ``"event"``):
     records a lost lease (``unit``, ``attempt``, ``reason``); ``reissue``
     records the straggler re-issue that followed (``unit``, the new
     ``attempt``).
+``reject`` / ``reconnect``
+    Socket-transport lease events (version 3), journaled through the
+    same commit-time history mechanism.  ``reject`` records an invalid
+    frame (bad signature, oversize, replayed, truncated — ``unit``,
+    ``attempt``, the transport ``reason``) that killed a live lease; the
+    matching ``expire`` (reason ``"reject"``) follows it.  ``reconnect``
+    records a worker whose connection dropped mid-lease re-greeting and
+    having the live lease re-attached (``unit``, ``attempt``).  Rejected
+    frames not attributable to a live lease (unauthenticated strangers,
+    replays landing after their twin committed) are wall-clock-dependent
+    and therefore never journaled — they appear in fleet stats only.
 ``tell``
     An optimizer update: ``trial``, CRN ``group``, the (possibly
     extrapolated / CRN-debiased) ``value`` recorded.
@@ -65,7 +76,8 @@ from typing import Any, Dict, List, Optional
 #: journal schema version (bumped on incompatible event changes)
 #: v2: adds ``retry`` and the fleet lease lifecycle events
 #: (``lease``/``expire``/``reissue``)
-VERSION = 2
+#: v3: adds the socket-transport lease events ``reject``/``reconnect``
+VERSION = 3
 
 
 def _read_clean(path: str) -> "tuple[List[Dict[str, Any]], int]":

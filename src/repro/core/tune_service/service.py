@@ -49,8 +49,10 @@ from .trial import FAILED, PAUSED, RUNNING, TERMINATED, Trial
 SCHEDULERS = (None, "asha")
 EXECUTORS = ("local", "fleet")
 
-#: fleet lease lifecycle event types (journaled at unit commit time)
-HISTORY_EVENTS = ("lease", "expire", "reissue")
+#: fleet lease lifecycle event types (journaled at unit commit time);
+#: v3 adds ``reject`` (an invalid frame killed the lease) and
+#: ``reconnect`` (a re-greeted worker re-attached its live lease)
+HISTORY_EVENTS = ("lease", "expire", "reissue", "reject", "reconnect")
 
 
 def _jsonify(obj):
@@ -193,31 +195,31 @@ class TuneService:
                  faults: FaultPlan = NO_FAULTS,
                  heartbeat_s: Optional[float] = None,
                  lease_deadline: Optional[int] = None,
-                 max_respawns: Optional[int] = None):
+                 max_respawns: Optional[int] = None,
+                 fleet_spec=None):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; expected "
                              f"one of {SCHEDULERS}")
         if executor not in EXECUTORS:
             raise ValueError(f"unknown executor {executor!r}; expected "
                              f"one of {EXECUTORS}")
+        if fleet_spec is not None and executor != "fleet":
+            raise ValueError("fleet_spec= requires executor='fleet'")
         if executor == "fleet":
             from .coordinator import FLEET_POOLS
-            if scheduler is not None:
-                # ROADMAP 3a: fleet leases dispatch full-epoch units only —
-                # a rung's partial-epoch carry never travels to a remote
-                # worker, so ASHA under the fleet would silently run every
-                # trial to full budget (no early stopping at all).  Refuse
-                # rather than no-op.
-                raise NotImplementedError(
-                    f"executor='fleet' does not support "
-                    f"scheduler={scheduler!r}: fleet work units are "
-                    f"full-epoch only (rung carries do not travel across "
-                    f"the lease protocol yet — ROADMAP item 3a); use "
-                    f"executor='async' for ASHA early stopping, or drop "
-                    f"the scheduler")
             if workers is not None:
                 slots = int(workers)
-            if pool not in FLEET_POOLS:
+            if fleet_spec is not None:
+                # the spec is the deployment artifact: it fixes the pool
+                # (socket), the worker count and the heartbeat/lease
+                # parameters the workers were launched with
+                pool = "socket"
+                slots = fleet_spec.workers
+                if heartbeat_s is None:
+                    heartbeat_s = fleet_spec.heartbeat_s
+                if lease_deadline is None:
+                    lease_deadline = fleet_spec.lease_deadline
+            elif pool not in FLEET_POOLS:
                 pool = "process"  # fleet workers are remote by definition
         if scheduler is not None and objective is not None:
             raise ValueError(
@@ -250,6 +252,7 @@ class TuneService:
         self.heartbeat_s = heartbeat_s
         self.lease_deadline = lease_deadline
         self.max_respawns = max_respawns
+        self.fleet_spec = fleet_spec
         # fleet workers (and process slots) evaluate in other processes, so
         # units ship the workload spec tuple rather than the built object
         self._ship_spec = pool in ("process", "socket")
@@ -294,8 +297,18 @@ class TuneService:
         }
         self._machine = study.machine
         opts = self.spec.options
+        # fleet×ASHA (ROADMAP 3a closed): a rung's partial-epoch state is
+        # never shipped across the lease protocol.  Instead every rung
+        # unit re-derives its prefix by evaluating [0, hi) from scratch —
+        # exact on both backends (`run_simulation_segment` is pinned
+        # segmented == unsegmented bitwise), it keeps each work unit a
+        # pure function of (config, hi) so straggler re-issue and
+        # first-commit-wins compose with promotion unchanged, and it
+        # keeps result frames small and cap-friendly (a scan carry holds
+        # per-page arrays).  So: no checkpoint carries under the fleet.
         self._can_checkpoint = objective is None and \
-            opts.backend == "jax" and self._jax_supported()
+            opts.backend == "jax" and executor != "fleet" and \
+            self._jax_supported()
         # bookkeeping
         self._units: Dict[int, Dict[str, Any]] = {}
         self._trials: List[Trial] = []
@@ -571,6 +584,9 @@ class TuneService:
                 kw["lease_deadline"] = self.lease_deadline
             if self.max_respawns is not None:
                 kw["max_respawns"] = self.max_respawns
+            if self.fleet_spec is not None:
+                kw["fleet_spec"] = self.fleet_spec  # never journaled: the
+                # spec carries the fleet's shared auth key
             self.executor = FleetExecutor(self.slots, pool=self.pool, **kw)
         else:
             self.executor = TrialExecutor(self.slots, self.pool,

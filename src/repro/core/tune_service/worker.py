@@ -34,34 +34,44 @@ Transports:
   self-terminates when its parent dies, so a SIGKILLed coordinator never
   leaks orphan evaluators.
 * **socket** (:func:`socket_main`, or ``python -m
-  repro.core.tune_service.worker --connect HOST:PORT``) — length-prefixed
-  pickle frames over TCP for workers on other hosts; the connection
-  dropping ends the worker.  (Frames are pickles: only connect workers to
-  a coordinator you trust.)
+  repro.core.tune_service.worker --connect HOST:PORT``) — authenticated,
+  length-capped frames over TCP (:mod:`.transport`) for workers on other
+  hosts.  Every frame is HMAC-signed with the fleet spec's shared
+  ``auth_key`` and the worker greets with a signed hello before any unit
+  is leased, so reachability no longer implies trust.  A dropped
+  connection does NOT end the worker: it re-dials with exponential
+  backoff and re-greets under the same identity, keeping any in-flight
+  evaluation alive across the gap — the coordinator re-attaches the live
+  lease, or first-commit-wins absorbs the duplicate if it already
+  expired.
 
 Injected faults (:mod:`.faults`) are applied HERE, keyed by
 ``(unit, attempt)``, because this is where real fleets break: process
 death, wedged heartbeats, lost/duplicated/late result messages, hung
-evaluations.
+evaluations, and (socket transport) corrupted / truncated / replayed
+frames, partitions and link latency.
 """
 
 from __future__ import annotations
 
 import os
-import pickle
 import queue
-import select
 import socket
-import struct
 import threading
 import time
 from typing import Any, Callable, Dict, Optional
 
 from .executor import _timed_safe
 from .faults import NO_FAULTS, FaultPlan
+from .transport import (DEFAULT_FRAME_TIMEOUT_S, DEFAULT_MAX_FRAME_BYTES,
+                        FleetSpec, FrameChannel, FrameError, greet)
 
 #: heartbeat cadence (seconds) while a unit is evaluating
 DEFAULT_HEARTBEAT_S = 0.1
+#: environment variables the CLI / launcher use to pass secrets and
+#: injected latency without putting them on argv (visible in ``ps``)
+KEY_ENV = "REPRO_FLEET_KEY"
+NET_DELAY_ENV = "REPRO_FLEET_NET_DELAY_S"
 
 
 def _apply_cache_env(cache_dir: Optional[str]) -> None:
@@ -126,10 +136,33 @@ class _Running:
         return self.timeout_s is not None and self.elapsed > self.timeout_s
 
 
+class TransportLost(Exception):
+    """The socket transport failed mid-serve (raised by the socket
+    transport's send/recv closures); the reconnect loop re-dials.  Any
+    in-flight evaluation survives in the :class:`_ServeState`."""
+
+
+class _ServeState:
+    """Serve-loop state that must survive a transport loss: the in-flight
+    evaluation (its daemon thread keeps computing while the worker
+    re-dials) and the wedged flag (a fired stall fault outlives any
+    number of reconnects)."""
+
+    def __init__(self):
+        self.current: Optional[_Running] = None
+        self.wedged = False  # a fired stall fault: alive, forever silent
+        #: a result whose send was cut off by a transport loss: resent
+        #: first thing after the next successful re-greet, so a partition
+        #: landing on the result frame costs a reconnect, not the unit
+        self.pending: Optional[Dict[str, Any]] = None
+
+
 def _serve(recv: Callable[[float], Optional[Dict[str, Any]]],
            send: Callable[[Dict[str, Any]], None],
            worker_id: int, heartbeat_s: float, faults: FaultPlan,
-           parent_alive: Callable[[], bool]) -> None:
+           parent_alive: Callable[[], bool],
+           state: Optional[_ServeState] = None,
+           hello: bool = True) -> str:
     """The worker loop shared by every transport.
 
     Idle: block on the transport (new units wake it immediately) and send
@@ -139,32 +172,46 @@ def _serve(recv: Callable[[float], Optional[Dict[str, Any]]],
     recovered.  Busy: wait on the evaluation's completion event (finished
     slots are reported instantly, not at the next poll tick), heartbeat
     the lease every ``heartbeat_s``, and poll the transport
-    non-blockingly for shutdown."""
-    send({"type": "hello", "worker": worker_id})
-    current: Optional[_Running] = None
-    wedged = False  # a fired stall fault: alive but permanently silent
+    non-blockingly for shutdown.
+
+    Returns ``"shutdown"`` (coordinator said so), ``"parent"`` (the
+    spawning coordinator process died) or ``"transport"`` (the transport
+    broke — the socket path re-dials with the same ``state``).  The
+    socket closures may also raise :class:`TransportLost` out of this
+    loop; ``state`` keeps that safe."""
+    if state is None:
+        state = _ServeState()
+    if hello:
+        send({"type": "hello", "worker": worker_id})
+    if state.pending is not None:
+        # the previous connection died between computing a result and
+        # delivering it: deliver before anything else (the coordinator
+        # just re-attached the lease; this resolves it)
+        out, state.pending = state.pending, None
+        send(out)
     last_hb = time.monotonic()
     while True:
         if not parent_alive():
-            return
+            return "parent"
         try:
-            if current is not None:
+            if state.current is not None:
                 delay = max(0.0, heartbeat_s
                             - (time.monotonic() - last_hb))
-                if current.timeout_s is not None:
+                if state.current.timeout_s is not None:
                     delay = min(delay, max(
-                        0.0, current.timeout_s - current.elapsed) + 0.01)
-                current.wait(delay)
+                        0.0, state.current.timeout_s
+                        - state.current.elapsed) + 0.01)
+                state.current.wait(delay)
                 msg = recv(0.0)
             else:
                 msg = recv(min(0.25, heartbeat_s))
         except (EOFError, OSError):
-            return  # transport gone: the coordinator died or hung up
+            return "transport"  # the coordinator died or hung up
         if msg is not None:
             if msg.get("type") == "shutdown":
-                return
+                return "shutdown"
             if msg.get("type") == "unit":
-                if current is not None and not current.done:
+                if state.current is not None and not state.current.done:
                     # the coordinator never double-books a worker; a unit
                     # arriving mid-unit means state was lost — refuse it
                     send({"type": "result", "worker": worker_id,
@@ -173,26 +220,27 @@ def _serve(recv: Callable[[float], Optional[Dict[str, Any]]],
                           "result": {"error": "worker busy (protocol "
                                               "violation)", "slot_s": 0.0}})
                     continue
-                current = _Running(msg, faults)
+                state.current = _Running(msg, faults)
                 continue
         now = time.monotonic()
-        if current is None:
-            if not wedged and now - last_hb >= heartbeat_s:
+        if state.current is None:
+            if not state.wedged and now - last_hb >= heartbeat_s:
                 last_hb = now
                 send({"type": "heartbeat", "worker": worker_id,
                       "unit": None, "attempt": None})
             continue
+        current = state.current
         u, a = current.unit, current.attempt
         if current.done:
             result = current.result
-            current = None
+            state.current = None
             last_hb = now
             if faults.stalls(u, a):
                 # stall: the worker wedges — this result and every later
                 # message (including idle heartbeats) are suppressed, so
                 # the lease expires by heartbeat SILENCE and the worker is
                 # written off as suspect until it speaks again (never)
-                wedged = True
+                state.wedged = True
                 continue
             if faults.drops(u, a):
                 # drop: pure message loss — the worker stays healthy, and
@@ -204,12 +252,14 @@ def _serve(recv: Callable[[float], Optional[Dict[str, Any]]],
                 time.sleep(delay)  # straggler: the late twin still arrives
             out = {"type": "result", "worker": worker_id, "unit": u,
                    "attempt": a, "result": result}
+            state.pending = out  # survives a transport loss mid-delivery
             send(out)
             if faults.dups(u, a):
                 send(out)
+            state.pending = None
         elif current.timed_out:
             t = current.timeout_s
-            current = None  # abandon the daemon thread; keep serving
+            state.current = None  # abandon the daemon thread; keep serving
             last_hb = now
             send({"type": "result", "worker": worker_id, "unit": u,
                   "attempt": a,
@@ -248,70 +298,210 @@ def process_main(worker_id: int, inbox, outbox, heartbeat_s: float,
         outbox.cancel_join_thread()
 
 
-# -- socket transport (length-prefixed pickle frames) ------------------------
-def send_frame(sock: socket.socket, obj: Any) -> None:
-    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    sock.sendall(struct.pack(">I", len(data)) + data)
-
-
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    buf = b""
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            raise EOFError("fleet connection closed")
-        buf += chunk
-    return buf
-
-
-def recv_frame(sock: socket.socket) -> Any:
-    """Blocking read of one frame."""
-    (n,) = struct.unpack(">I", _recv_exact(sock, 4))
-    return pickle.loads(_recv_exact(sock, n))
+# -- socket transport (authenticated frames, reconnect-with-backoff) ---------
+def _dial(addr, key: bytes, worker_id: int, max_frame: int,
+          frame_timeout_s: float) -> FrameChannel:
+    """One connect + greet attempt; raises OSError/FrameError on failure."""
+    sock = socket.create_connection(tuple(addr), timeout=5.0)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    chan = FrameChannel(sock, key, max_frame=max_frame,
+                        frame_timeout_s=frame_timeout_s)
+    try:
+        greet(chan, worker_id)
+    except BaseException:
+        chan.close()
+        raise
+    return chan
 
 
 def socket_main(addr, worker_id: int,
                 heartbeat_s: float = DEFAULT_HEARTBEAT_S,
                 faults: FaultPlan = NO_FAULTS,
-                cache_dir: Optional[str] = None) -> None:
-    """Entry point for socket workers (same-box tests spawn this in a
-    process; real remote hosts use the module CLI)."""
+                cache_dir: Optional[str] = None,
+                key: Optional[bytes] = None,
+                max_frame: int = DEFAULT_MAX_FRAME_BYTES,
+                frame_timeout_s: float = DEFAULT_FRAME_TIMEOUT_S,
+                max_redials: int = 8,
+                redial_backoff_s: float = 0.2,
+                net_delay_s: float = 0.0,
+                announce: Optional[Callable[[str], None]] = None) -> None:
+    """Entry point for socket workers (same-box tests and self-spawned
+    fleets call this in a process; remote hosts use the module CLI).
+
+    The outer loop is reconnect-with-backoff: dial, greet with the signed
+    hello, serve until the transport breaks, then re-dial (exponential
+    backoff, at most ``max_redials`` consecutive failures) and re-greet
+    under the same ``worker_id``.  The :class:`_ServeState` — including
+    an in-flight evaluation's daemon thread — survives the gap, so after
+    re-greeting the worker resumes heartbeating its lease and the
+    coordinator re-attaches it.  A greet the coordinator never answers
+    (wrong auth key) fails fast instead of redialing forever.
+    """
     _apply_cache_env(cache_dir)
-    sock = socket.create_connection(tuple(addr))
-    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    lock = threading.Lock()
+    if key is None:
+        hexkey = os.environ.get(KEY_ENV, "")
+        if not hexkey:
+            raise ValueError(
+                f"socket workers need the fleet auth key: pass key= or "
+                f"set {KEY_ENV} (see FleetSpec / tools/fleet_launch.py)")
+        key = bytes.fromhex(hexkey)
+    if not net_delay_s:
+        net_delay_s = float(os.environ.get(NET_DELAY_ENV, "0") or 0)
+    state = _ServeState()
+    # frame faults fire once per (unit, attempt) per worker process —
+    # a re-issued attempt has fresh coordinates, so it runs clean
+    fired: set = set()
+    partition_hold = [0.0]
 
-    def recv(timeout: float):
-        ready, _, _ = select.select([sock], [], [], timeout)
-        if not ready:
-            return None
-        return recv_frame(sock)  # header seen: the frame follows promptly
+    def run_once(chan: FrameChannel) -> str:
+        def recv(timeout: float):
+            try:
+                return chan.recv(wait_timeout=timeout)
+            except FrameError as e:
+                # a garbled or hostile coordinator stream: drop + re-dial
+                raise TransportLost(str(e)) from e
 
-    def send(msg: Dict[str, Any]) -> None:
-        with lock:
-            send_frame(sock, msg)
+        def send(msg: Dict[str, Any]) -> None:
+            if net_delay_s:
+                time.sleep(net_delay_s)
+            kind = msg.get("type")
+            u, a = msg.get("unit"), msg.get("attempt")
+            try:
+                if kind == "result":
+                    hold = faults.partitions(u, a)
+                    if hold and ("partition", u, a) not in fired:
+                        # the link drops mid-lease, just before the result
+                        # frame, and stays down: close, hold, then re-dial
+                        # and re-greet.  Keyed to the result (every unit
+                        # sends exactly one) so the fault fires
+                        # deterministically; the result itself survives in
+                        # ``state.pending`` and is delivered after the
+                        # reconnect — the coordinator re-attaches the
+                        # lease, nothing is re-executed
+                        fired.add(("partition", u, a))
+                        partition_hold[0] = hold
+                        chan.close()
+                        raise TransportLost("injected partition")
+                    raw = chan.encode(msg)
+                    if faults.corrupts(u, a) and \
+                            ("corrupt", u, a) not in fired:
+                        fired.add(("corrupt", u, a))
+                        # flip the last payload byte: the signature no
+                        # longer verifies coordinator-side
+                        raw = raw[:-1] + bytes([raw[-1] ^ 0x01])
+                        chan.send_bytes(raw)
+                        return
+                    if faults.truncates(u, a) and \
+                            ("truncate", u, a) not in fired:
+                        fired.add(("truncate", u, a))
+                        # half a frame then EOF: closing is what makes the
+                        # fault deterministic (the coordinator always sees
+                        # truncated, never a signature race with later
+                        # heartbeat bytes filling the body read)
+                        chan.send_bytes(raw[:len(raw) // 2])
+                        chan.close()
+                        raise TransportLost("injected truncated frame")
+                    chan.send_bytes(raw)
+                    if faults.replays(u, a) and \
+                            ("replay", u, a) not in fired:
+                        fired.add(("replay", u, a))
+                        # the same bytes again: a stale sequence number —
+                        # rejected even though the signature verifies
+                        chan.send_bytes(raw)
+                    return
+                chan.send(msg)
+            except TransportLost:
+                raise
+            except (OSError, FrameError) as e:
+                raise TransportLost(str(e)) from e
 
-    try:
-        _serve(recv, send, worker_id, heartbeat_s, faults, lambda: True)
-    finally:
         try:
-            sock.close()
+            # greet() already presented the signed hello; the coordinator
+            # reader forwards it, so the serve loop must not repeat it
+            return _serve(recv, send, worker_id, heartbeat_s, faults,
+                          lambda: True, state=state, hello=False)
+        except TransportLost:
+            return "transport"
+
+    dials = 0
+    while True:
+        try:
+            chan = _dial(addr, key, worker_id, max_frame, frame_timeout_s)
+        except FrameError:
+            return  # greeted but refused / garbled welcome: wrong key
         except OSError:
-            pass
+            dials += 1
+            if dials > max_redials:
+                return
+            time.sleep(min(redial_backoff_s * (2 ** (dials - 1)), 2.0))
+            continue
+        dials = 0
+        if announce is not None:
+            announce(f"worker {worker_id} greeted")
+        outcome = run_once(chan)
+        chan.close()
+        if outcome in ("shutdown", "parent"):
+            return
+        if partition_hold[0]:
+            time.sleep(partition_hold[0])
+            partition_hold[0] = 0.0
+        dials += 1
+        if dials > max_redials:
+            return
+        time.sleep(min(redial_backoff_s * (2 ** (dials - 1)), 2.0))
 
 
 def main(argv=None) -> int:
     import argparse
     p = argparse.ArgumentParser(
-        description="repro tune-service fleet worker (socket transport)")
-    p.add_argument("--connect", required=True, metavar="HOST:PORT",
-                   help="coordinator address")
+        description="repro tune-service fleet worker (authenticated "
+                    "socket transport)")
+    p.add_argument("--connect", metavar="HOST:PORT", default=None,
+                   help="coordinator address (defaults to the fleet "
+                        "spec's host:port)")
     p.add_argument("--id", type=int, default=0, help="worker id")
-    p.add_argument("--heartbeat", type=float, default=DEFAULT_HEARTBEAT_S,
+    p.add_argument("--fleet-spec", metavar="SPEC.json", default=None,
+                   help="fleet spec file: address, auth key, heartbeat "
+                        "and transport caps in one artifact")
+    p.add_argument("--key-file", metavar="PATH", default=None,
+                   help="file holding the hex auth key (overrides the "
+                        f"spec; default: ${KEY_ENV})")
+    p.add_argument("--heartbeat", type=float, default=None,
                    help="heartbeat cadence in seconds")
+    p.add_argument("--max-redials", type=int, default=None,
+                   help="consecutive failed re-dials before giving up")
     args = p.parse_args(argv)
-    host, port = args.connect.rsplit(":", 1)
-    socket_main((host, int(port)), args.id, heartbeat_s=args.heartbeat)
+    spec = FleetSpec.load(args.fleet_spec) if args.fleet_spec else None
+    key = None
+    if args.key_file:
+        with open(args.key_file, "r", encoding="utf-8") as fh:
+            key = bytes.fromhex(fh.read().strip())
+    elif os.environ.get(KEY_ENV):
+        key = bytes.fromhex(os.environ[KEY_ENV])
+    elif spec is not None and spec.auth_key:
+        key = spec.key_bytes
+    if args.connect:
+        host, port = args.connect.rsplit(":", 1)
+        addr = (host, int(port))
+    elif spec is not None:
+        addr = (spec.host, spec.port)
+    else:
+        p.error("--connect or --fleet-spec is required")
+    kw: Dict[str, Any] = {}
+    if spec is not None:
+        kw.update(max_frame=spec.max_frame_bytes,
+                  frame_timeout_s=spec.frame_timeout_s,
+                  max_redials=spec.max_redials,
+                  redial_backoff_s=spec.redial_backoff_s)
+        if args.heartbeat is None:
+            args.heartbeat = spec.heartbeat_s
+    if args.max_redials is not None:
+        kw["max_redials"] = args.max_redials
+    socket_main(addr, args.id,
+                heartbeat_s=args.heartbeat if args.heartbeat is not None
+                else DEFAULT_HEARTBEAT_S,
+                key=key, announce=lambda line: print(line, flush=True),
+                **kw)
     return 0
 
 

@@ -1,0 +1,341 @@
+"""Transport chaos: the authenticated frame codec under hostile bytes.
+
+The hardened-fleet PR's security bars, pinned endpoint-by-endpoint:
+
+* every malformed frame class — truncated, oversize, bit-flipped,
+  replayed, unsigned / wrong-key, wrong magic, wrong version, stalled
+  mid-frame — raises its specific :class:`FrameError` instead of
+  unpickling attacker bytes or wedging the reader;
+* the oversize gate fires BEFORE any payload allocation (a corrupt
+  4-byte length header used to balloon a 4 GiB buffer);
+* a live coordinator fed stranger garbage rejects + drops and the study
+  still completes (nothing wedges, nothing is leased to the stranger);
+* a worker dialing a hostile/garbled coordinator fails fast instead of
+  redialing forever;
+* :class:`FleetSpec` round-trips through JSON, validates its fields and
+  refuses unknown ones.
+"""
+
+import os
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core.tune_service.transport import (
+    _HEADER, DEFAULT_MAX_FRAME_BYTES, MAGIC, SIG_BYTES, VERSION,
+    FleetSpec, FrameChannel, FrameError, FrameMagicError,
+    FrameProtocolError, FrameReplayError, FrameSignatureError,
+    FrameTimeoutError, FrameTooLargeError, FrameTruncatedError,
+    FrameVersionError, accept_greet, greet, reject_reason)
+
+KEY = bytes(range(32))
+OTHER_KEY = bytes(range(32, 64))
+
+
+def _pair(**kw):
+    a, b = socket.socketpair()
+    return FrameChannel(a, KEY, **kw), FrameChannel(b, KEY, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the happy path: signed frames round-trip, sequences advance
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_and_sequences():
+    tx, rx = _pair()
+    for i in range(5):
+        tx.send({"type": "heartbeat", "n": i})
+        assert rx.recv(wait_timeout=1.0) == {"type": "heartbeat", "n": i}
+    tx.close(), rx.close()
+
+
+def test_idle_poll_returns_none():
+    tx, rx = _pair()
+    t0 = time.monotonic()
+    assert rx.recv(wait_timeout=0.05) is None
+    assert time.monotonic() - t0 < 1.0
+    # a zero timeout is an instant poll, not a transport error
+    assert rx.recv(wait_timeout=0.0) is None
+    tx.close(), rx.close()
+
+
+def test_short_key_refused():
+    a, b = socket.socketpair()
+    with pytest.raises(ValueError, match="16 bytes"):
+        FrameChannel(a, b"short")
+    a.close(), b.close()
+
+
+# ---------------------------------------------------------------------------
+# the fuzz corpus: every malformed-frame class -> its specific rejection
+# ---------------------------------------------------------------------------
+
+def _valid_frame(chan, obj={"type": "heartbeat"}):
+    return chan.encode(obj)
+
+
+def test_truncated_frame_rejected():
+    tx, rx = _pair()
+    raw = _valid_frame(tx)
+    tx.sock.sendall(raw[: len(raw) // 2])
+    tx.close()
+    with pytest.raises(FrameTruncatedError):
+        rx.recv(wait_timeout=1.0)
+    rx.close()
+
+
+def test_clean_close_is_eof_not_frame_error():
+    tx, rx = _pair()
+    tx.close()
+    with pytest.raises(EOFError):
+        rx.recv(wait_timeout=1.0)
+    rx.close()
+
+
+def test_oversize_header_rejected_before_allocation():
+    tx, rx = _pair(max_frame=4096)
+    # a header claiming a ~4 GiB payload: the cap must fire on the header
+    # alone — no payload bytes exist to read, so any attempt to allocate/
+    # read the claimed body would wedge this single-threaded test
+    evil = _HEADER.pack(MAGIC, VERSION, 0, 0xFFFF0000)
+    tx.sock.sendall(evil)
+    with pytest.raises(FrameTooLargeError):
+        rx.recv(wait_timeout=1.0)
+    tx.close(), rx.close()
+
+
+def test_oversize_outgoing_rejected():
+    tx, rx = _pair(max_frame=4096)
+    with pytest.raises(FrameTooLargeError):
+        tx.send({"blob": b"x" * 8192})
+    tx.close(), rx.close()
+
+
+def test_bitflip_anywhere_in_payload_rejected():
+    for flip in (0, 7):  # first and last payload byte
+        tx, rx = _pair()
+        raw = bytearray(_valid_frame(tx, {"v": 1.0}))
+        idx = -1 if flip else _HEADER.size + SIG_BYTES
+        raw[idx] ^= 0x01
+        tx.sock.sendall(bytes(raw))
+        with pytest.raises(FrameSignatureError):
+            rx.recv(wait_timeout=1.0)
+        tx.close(), rx.close()
+
+
+def test_unsigned_and_wrong_key_rejected():
+    # wrong key: a peer without the fleet spec cannot forge a signature
+    a, b = socket.socketpair()
+    tx = FrameChannel(a, OTHER_KEY)
+    rx = FrameChannel(b, KEY)
+    tx.send({"type": "hello", "worker": 0})
+    with pytest.raises(FrameSignatureError):
+        rx.recv(wait_timeout=1.0)
+    tx.close(), rx.close()
+    # zeroed signature: same rejection
+    tx, rx = _pair()
+    raw = bytearray(_valid_frame(tx))
+    raw[_HEADER.size:_HEADER.size + SIG_BYTES] = b"\x00" * SIG_BYTES
+    tx.sock.sendall(bytes(raw))
+    with pytest.raises(FrameSignatureError):
+        rx.recv(wait_timeout=1.0)
+    tx.close(), rx.close()
+
+
+def test_replayed_frame_rejected():
+    tx, rx = _pair()
+    raw = _valid_frame(tx)
+    tx.send_bytes(raw)
+    assert rx.recv(wait_timeout=1.0) == {"type": "heartbeat"}
+    tx.send_bytes(raw)  # identical bytes, valid signature, stale seq
+    with pytest.raises(FrameReplayError):
+        rx.recv(wait_timeout=1.0)
+    tx.close(), rx.close()
+
+
+def test_bad_magic_and_version_rejected():
+    tx, rx = _pair()
+    tx.sock.sendall(b"GET / HTTP/1.1\r\n" + b"\x00" * 32)
+    with pytest.raises(FrameMagicError):
+        rx.recv(wait_timeout=1.0)
+    tx.close(), rx.close()
+    tx, rx = _pair()
+    raw = bytearray(_valid_frame(tx))
+    raw[3] = VERSION + 1  # version byte
+    tx.sock.sendall(bytes(raw))
+    with pytest.raises(FrameVersionError):
+        rx.recv(wait_timeout=1.0)
+    tx.close(), rx.close()
+
+
+def test_stalled_peer_bounded_by_frame_timeout():
+    tx, rx = _pair(frame_timeout_s=0.2)
+    raw = _valid_frame(tx)
+    tx.sock.sendall(raw[:4])  # header started, then silence (no close)
+    t0 = time.monotonic()
+    with pytest.raises(FrameTimeoutError):
+        rx.recv(wait_timeout=1.0)
+    assert time.monotonic() - t0 < 2.0  # bounded, not wedged
+    tx.close(), rx.close()
+
+
+def test_reject_reasons_are_journal_stable():
+    assert reject_reason(FrameSignatureError()) == "bad-signature"
+    assert reject_reason(FrameTooLargeError()) == "oversize"
+    assert reject_reason(FrameReplayError()) == "replay"
+    assert reject_reason(FrameTruncatedError()) == "truncated"
+    assert reject_reason(FrameTimeoutError()) == "timeout"
+    assert reject_reason(FrameMagicError()) == "bad-magic"
+    assert reject_reason(FrameVersionError()) == "bad-version"
+    assert reject_reason(FrameProtocolError()) == "protocol"
+    assert reject_reason(OSError("boom")) == "transport"
+
+
+# ---------------------------------------------------------------------------
+# the greet handshake: identity before leases
+# ---------------------------------------------------------------------------
+
+def test_greet_roundtrip():
+    tx, rx = _pair()
+    t = threading.Thread(target=greet, args=(tx, 3), daemon=True)
+    t.start()
+    assert accept_greet(rx, timeout_s=2.0) == 3
+    t.join(timeout=2.0)
+    assert not t.is_alive()
+    tx.close(), rx.close()
+
+
+def test_greet_requires_hello_first():
+    tx, rx = _pair()
+    tx.send({"type": "result", "unit": 0})  # signed, but not a hello
+    with pytest.raises(FrameProtocolError):
+        accept_greet(rx, timeout_s=1.0)
+    tx.close(), rx.close()
+    # a bool worker id is not an identity
+    tx, rx = _pair()
+    tx.send({"type": "hello", "worker": True})
+    with pytest.raises(FrameProtocolError):
+        accept_greet(rx, timeout_s=1.0)
+    tx.close(), rx.close()
+
+
+def test_greet_wrong_key_never_welcomed():
+    a, b = socket.socketpair()
+    tx = FrameChannel(a, OTHER_KEY)
+    rx = FrameChannel(b, KEY)
+    worker_exc = []
+
+    def worker_greet():
+        try:
+            greet(tx, 0, timeout_s=2.0)
+        except Exception as e:  # noqa: BLE001 - captured for assertion
+            worker_exc.append(e)
+
+    t = threading.Thread(target=worker_greet, daemon=True)
+    t.start()
+    with pytest.raises(FrameSignatureError):
+        accept_greet(rx, timeout_s=2.0)
+    rx.close()  # coordinator drops: the worker's greet fails fast
+    t.join(timeout=5.0)
+    assert isinstance(worker_exc[0], FrameProtocolError)
+    tx.close()
+
+
+def test_silent_peer_greet_times_out():
+    tx, rx = _pair()
+    with pytest.raises(FrameTimeoutError):
+        accept_greet(rx, timeout_s=0.1)
+    tx.close(), rx.close()
+
+
+# ---------------------------------------------------------------------------
+# endpoint fuzz: a live coordinator under stranger garbage
+# ---------------------------------------------------------------------------
+
+def _unit(x):
+    return {"value": float(x) * 2.0, "slot_s": 0.0}
+
+
+def test_stranger_garbage_does_not_wedge_the_fleet():
+    from repro.core.tune_service.coordinator import FleetExecutor
+    ex = FleetExecutor(workers=1, pool="socket", heartbeat_s=0.05,
+                       lease_deadline=40)
+    try:
+        addr = ex.address
+        assert addr is not None
+        # a stranger who can reach the port: raw garbage, an unsigned
+        # pickle-shaped blob, and a half-greet then hangup
+        for blob in (b"\x00" * 64, b"GET / HTTP/1.1\r\n\r\n",
+                     _HEADER.pack(MAGIC, VERSION, 0, 16) + b"j" * 48):
+            s = socket.create_connection(addr, timeout=2.0)
+            s.sendall(blob)
+            s.close()
+        for i in range(3):
+            ex.submit(_unit, i)
+        got = [ex.pop_next() for _ in range(3)]
+        assert [r["value"] for _, r in got] == [0.0, 2.0, 4.0]
+        stats = ex.stats()
+        assert stats["n_rejected_frames"] >= 3
+        # the stranger never held a lease: nothing was expired for it
+        assert stats["degraded"] is False
+    finally:
+        ex.close()
+
+
+def test_hostile_coordinator_does_not_wedge_the_worker():
+    """A worker dialing a garbage-speaking endpoint fails fast (greet
+    gets no valid welcome) instead of redialing forever."""
+    from repro.core.tune_service.worker import socket_main
+
+    srv = socket.create_server(("127.0.0.1", 0))
+    addr = srv.getsockname()[:2]
+
+    def hostile():
+        conn, _ = srv.accept()
+        conn.recv(4096)          # swallow the hello
+        conn.sendall(b"\xde\xad\xbe\xef" * 16)  # garbage "welcome"
+        conn.close()
+
+    t = threading.Thread(target=hostile, daemon=True)
+    t.start()
+    t0 = time.monotonic()
+    socket_main(addr, 0, heartbeat_s=0.05, key=KEY, max_redials=2,
+                redial_backoff_s=0.05)
+    assert time.monotonic() - t0 < 10.0  # returned, not wedged
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec: one frozen JSON artifact describes the whole fleet
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_roundtrip(tmp_path):
+    spec = FleetSpec.generate(workers=3, port=5555,
+                              hosts=("a", "b", "c"), heartbeat_s=0.2)
+    path = os.path.join(tmp_path, "fleet.json")
+    spec.save(path)
+    assert FleetSpec.load(path) == spec
+    assert spec.external
+    assert len(spec.key_bytes) == 32
+    assert FleetSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="workers"):
+        FleetSpec(workers=0)
+    with pytest.raises(ValueError, match="one host per worker"):
+        FleetSpec(workers=2, hosts=("a",))
+    with pytest.raises(ValueError, match="hex"):
+        FleetSpec(auth_key="not-hex!")
+    with pytest.raises(ValueError, match="16 bytes"):
+        FleetSpec(auth_key="aabb")
+    with pytest.raises(ValueError, match="max_frame_bytes"):
+        FleetSpec(max_frame_bytes=16)
+    with pytest.raises(ValueError, match="unknown FleetSpec fields"):
+        FleetSpec.from_dict({"workers": 2, "warp_drive": True})
+    with pytest.raises(ValueError, match="no auth_key"):
+        FleetSpec().key_bytes
+    assert FleetSpec.generate(workers=2).max_frame_bytes == \
+        DEFAULT_MAX_FRAME_BYTES

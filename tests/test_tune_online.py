@@ -1,5 +1,5 @@
 """Online re-tuning: window loop, warm restart, hysteresis guard,
-journal kill/resume byte-identity, and the fleet x ASHA fail-fast.
+journal kill/resume byte-identity, and fleet x ASHA composition.
 
 Contracts pinned here (see ``repro.core.tune_online``):
 
@@ -12,8 +12,10 @@ Contracts pinned here (see ``repro.core.tune_online``):
   uninterrupted journal byte for byte;
 * warm restart (``SMACOptimizer(seed_configs=...)``) suggests the seeded
   elites first, before default/random init;
-* ``executor="fleet"`` with ``scheduler="asha"`` fails fast (it used to
-  silently run every trial at full budget — ROADMAP 3a).
+* ``executor="fleet"`` with ``scheduler="asha"`` actually early-stops
+  (it used to silently run every trial at full budget, then fail fast —
+  ROADMAP 3a, closed by the hardened-fleet PR: rung segments re-derive
+  ``[0, hi)`` from scratch, so promote/stop composes with leases).
 """
 
 import os
@@ -168,13 +170,24 @@ def test_seed_configs_fill_batch_head_then_backfill():
 
 
 # ---------------------------------------------------------------------------
-# fleet x ASHA: fail fast instead of silently skipping early stopping
+# fleet x ASHA: early stopping now composes with leases (ROADMAP 3a)
 # ---------------------------------------------------------------------------
 
-def test_fleet_asha_fails_fast():
-    st = Study(ExperimentSpec(
-        engine="hemem", workload=dict(name="gups", scale=0.03),
-        options=SimOptions(backend="jax", sampler="sparse")))
-    with pytest.raises(NotImplementedError,
-                       match="full-epoch only.*ROADMAP"):
-        st.tune(budget=4, executor="fleet", scheduler="asha", workers=2)
+def test_fleet_asha_early_stops():
+    """The fleet executor honours ASHA rungs: stopped trials run fewer
+    epochs than promoted ones, and the incumbent matches the local async
+    ASHA run bitwise (the old code silently ran full budget, then failed
+    fast; rung segments now re-derive ``[0, hi)`` from scratch)."""
+    def spec():
+        return ExperimentSpec(
+            engine="hemem", workload=dict(name="gups", scale=0.03),
+            options=SimOptions(backend="jax", sampler="sparse"))
+    kw = dict(budget=4, seed=3, n_init=2, scheduler="asha")
+    base = Study(spec()).tune(executor="async", slots=2, **kw)
+    r = Study(spec()).tune(executor="fleet", workers=2, **kw)
+    assert [(o.config, o.value) for o in r.history] == \
+        [(o.config, o.value) for o in base.history]
+    assert r.epochs_committed == base.epochs_committed
+    # early stopping really fired: not every trial reached full epochs
+    assert r.epochs_committed < r.budget * r.max_epochs
+    assert r.asha_epochs_saved_frac > 0

@@ -1,0 +1,244 @@
+#!/usr/bin/env python
+"""Bring up a tune-service worker fleet from ONE frozen FleetSpec.
+
+The spec file (see :class:`repro.core.tune_service.FleetSpec`) is the
+whole hand-off between the coordinator host and the worker hosts: bind
+address, shared auth key, worker count / host list, heartbeat + lease
+parameters and the transport caps.  This tool turns it into running
+workers:
+
+initialize a spec (mints a fresh 32-byte auth key, picks a free port)::
+
+    python tools/fleet_launch.py --init fleet.json --workers 4
+
+start the coordinator against it (any host that can reach the workers)::
+
+    Study(spec).tune(executor="fleet", scheduler="asha",
+                     fleet_spec=FleetSpec.load("fleet.json"),
+                     journal="study.jsonl")
+
+bring up the workers:
+
+* **local mode** (``hosts`` empty in the spec): spawns ``workers`` local
+  subprocesses of ``python -m repro.core.tune_service.worker``, passes
+  the auth key via the ``REPRO_FLEET_KEY`` environment variable (argv is
+  visible in ``ps``; the key must not be), health-checks every greet by
+  watching worker stdout for the ``worker N greeted`` announce line, and
+  tears the fleet down cleanly (SIGTERM, then SIGKILL) on exit or
+  Ctrl-C::
+
+      python tools/fleet_launch.py fleet.json
+
+* **remote mode** (``hosts`` listed, or ``--print``): prints one ready-
+  to-run command per host — run each on its host; the workers re-dial
+  with backoff until the coordinator is up, and reconnect if the link
+  drops::
+
+      python tools/fleet_launch.py fleet.json --print
+
+The spec file contains the fleet's shared secret: keep it out of version
+control and world-readable paths (``--init`` writes it ``0600``).
+"""
+
+import argparse
+import os
+import queue
+import shlex
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.tune_service.transport import FleetSpec  # noqa: E402
+from repro.core.tune_service.worker import KEY_ENV  # noqa: E402
+
+GREETED = "greeted"
+
+
+def _free_port(host: str) -> int:
+    with socket.socket() as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def worker_command(spec_path: str, worker_id: int,
+                   python: str = "python") -> str:
+    """The per-host worker invocation (the auth key travels via the spec
+    file / ``REPRO_FLEET_KEY``, never argv)."""
+    return (f"{python} -m repro.core.tune_service.worker "
+            f"--fleet-spec {shlex.quote(spec_path)} --id {worker_id}")
+
+
+class LocalFleet:
+    """``spec.workers`` locally-spawned socket workers, health-checked by
+    their greet announces and torn down cleanly.  Context-manageable."""
+
+    def __init__(self, spec: FleetSpec, spec_path: str):
+        self.spec = spec
+        self.spec_path = spec_path
+        self._lines: "queue.Queue[str]" = queue.Queue()
+        self.greeted: set = set()
+        env = dict(os.environ, **{KEY_ENV: spec.auth_key})
+        src = os.path.abspath(os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        self.procs = []
+        for i in range(spec.workers):
+            p = subprocess.Popen(
+                [sys.executable, "-m", "repro.core.tune_service.worker",
+                 "--fleet-spec", spec_path, "--id", str(i)],
+                stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                text=True, env=env)
+            self.procs.append(p)
+            threading.Thread(target=self._pump, args=(p,),
+                             daemon=True).start()
+
+    def _pump(self, p) -> None:
+        for line in p.stdout:
+            self._lines.put(line.rstrip())
+
+    def wait_greeted(self, timeout_s: float = 60.0,
+                     echo: bool = False) -> bool:
+        """Health-check: every worker presented its signed greet and was
+        welcomed (requires the coordinator to be up — workers re-dial
+        with backoff until it is)."""
+        deadline = time.monotonic() + timeout_s
+        while len(self.greeted) < self.spec.workers:
+            try:
+                line = self._lines.get(
+                    timeout=max(0.01, deadline - time.monotonic()))
+            except queue.Empty:
+                return False
+            if echo:
+                print(f"  {line}", flush=True)
+            if GREETED in line:
+                try:
+                    self.greeted.add(int(line.split()[1]))
+                except (IndexError, ValueError):
+                    pass
+            if time.monotonic() > deadline:
+                return False
+        return True
+
+    @property
+    def alive(self) -> int:
+        return sum(1 for p in self.procs if p.poll() is None)
+
+    def join(self, timeout_s: float) -> None:
+        deadline = time.monotonic() + timeout_s
+        for p in self.procs:
+            try:
+                p.wait(timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                pass
+
+    def terminate(self) -> None:
+        for p in self.procs:
+            if p.poll() is None:
+                p.send_signal(signal.SIGTERM)
+        self.join(2.0)
+        for p in self.procs:
+            if p.poll() is None:
+                p.kill()
+        for p in self.procs:
+            try:
+                p.wait(timeout=1.0)
+            except subprocess.TimeoutExpired:
+                pass
+            if p.stdout is not None:
+                p.stdout.close()
+
+    def __enter__(self) -> "LocalFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.terminate()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("spec", metavar="SPEC.json", help="fleet spec file")
+    ap.add_argument("--init", action="store_true",
+                    help="write a fresh spec (new auth key, free port) "
+                         "instead of launching")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker count for --init")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="coordinator bind host for --init")
+    ap.add_argument("--port", type=int, default=None,
+                    help="coordinator port for --init (default: pick a "
+                         "free one)")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated worker hosts for --init "
+                         "(remote mode; one per worker)")
+    ap.add_argument("--heartbeat", type=float, default=None,
+                    help="heartbeat cadence for --init")
+    ap.add_argument("--print", dest="print_only", action="store_true",
+                    help="print per-host worker commands, launch nothing")
+    ap.add_argument("--greet-timeout", type=float, default=60.0,
+                    help="seconds to wait for every worker's greet")
+    args = ap.parse_args(argv)
+
+    if args.init:
+        kw = {"workers": args.workers, "host": args.host,
+              "port": args.port if args.port is not None
+              else _free_port(args.host)}
+        if args.hosts:
+            kw["hosts"] = tuple(h.strip() for h in args.hosts.split(","))
+        if args.heartbeat is not None:
+            kw["heartbeat_s"] = args.heartbeat
+        spec = FleetSpec.generate(**kw)
+        spec.save(args.spec)
+        os.chmod(args.spec, 0o600)  # the spec holds the shared secret
+        print(f"wrote {args.spec}: {spec.workers} workers, coordinator "
+              f"{spec.host}:{spec.port} (auth key minted; file mode 0600)")
+        return 0
+
+    spec = FleetSpec.load(args.spec)
+    if spec.port == 0:
+        print("spec has port 0 (ephemeral): launched workers could not "
+              "find the coordinator; re---init with a fixed port",
+              file=sys.stderr)
+        return 2
+
+    if args.print_only or spec.external:
+        hosts = spec.hosts or ("<worker-host>",) * spec.workers
+        print(f"# coordinator: bind {spec.host}:{spec.port} "
+              f"(Study.tune(executor='fleet', fleet_spec=...))")
+        print(f"# copy {args.spec} to each worker host (mode 0600), then:")
+        for i, h in enumerate(hosts):
+            print(f"{h}$ {worker_command(args.spec, i)}")
+        return 0
+
+    with LocalFleet(spec, args.spec) as fleet:
+        print(f"launched {spec.workers} workers -> "
+              f"{spec.host}:{spec.port}; waiting for greets "
+              f"(the workers re-dial until the coordinator is up)",
+              flush=True)
+        ok = fleet.wait_greeted(args.greet_timeout, echo=True)
+        if not ok and fleet.alive < spec.workers:
+            print("some workers exited before greeting (wrong key? "
+                  "coordinator unreachable?)", file=sys.stderr)
+            return 1
+        if ok:
+            print(f"all {spec.workers} workers greeted; serving until "
+                  f"the coordinator shuts the fleet down (Ctrl-C to "
+                  f"stop)", flush=True)
+        try:
+            while fleet.alive:
+                time.sleep(0.25)
+        except KeyboardInterrupt:
+            pass
+    print("fleet torn down")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

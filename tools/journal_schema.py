@@ -17,6 +17,9 @@ Checks the structural invariants the deterministic control loop guarantees
   counts (wall-clock-free);
 * (version 2) ``retry`` attempts per trial count 1, 2, ... and only a
   non-terminal trial retries;
+* (version 3) ``reject`` and ``reconnect`` reference an open lease at its
+  current attempt (a reject precedes that attempt's ``expire``; a
+  reconnect re-attaches the still-live lease);
 * **unknown event types FAIL validation** — a journal written by newer
   code must not silently pass an older validator.
 
@@ -48,8 +51,12 @@ EVENT_FIELDS = {
     "lease": {"unit": int, "attempt": int, "deadline": int},
     "expire": {"unit": int, "attempt": int, "reason": str},
     "reissue": {"unit": int, "attempt": int},
+    # version 3: socket-transport lease events (an invalid frame killing
+    # a live lease; a reconnected worker re-attaching one)
+    "reject": {"unit": int, "attempt": int, "reason": str},
+    "reconnect": {"unit": int, "attempt": int},
 }
-KNOWN_VERSIONS = (1, 2)
+KNOWN_VERSIONS = (1, 2, 3)
 
 
 def validate_events(events):
@@ -136,6 +143,16 @@ def validate_events(events):
                        f"expected {lease_attempt[u] + 1}")
             else:
                 lease_attempt[u] = ev["attempt"]
+        elif kind in ("reject", "reconnect"):
+            # version 3: both reference the unit's CURRENT lease attempt
+            # (a reject is followed by that attempt's expire; a reconnect
+            # re-attaches the still-live lease)
+            u = ev["unit"]
+            if u not in lease_attempt:
+                bad(i, f"{kind!r} for unit {u} with no 'lease'")
+            elif ev["attempt"] != lease_attempt[u]:
+                bad(i, f"unit {u} {kind} at attempt {ev['attempt']}, "
+                       f"current is {lease_attempt[u]}")
         elif kind == "retry":
             t = ev["trial"]
             if t not in asked:
